@@ -1,0 +1,188 @@
+"""Benchmark harness — one function per paper table/figure + roofline.
+
+Output convention: ``name,us_per_call,derived`` CSV rows (derived carries
+the table-specific payload, ';'-separated).
+
+  table1_resources   — paper Table 1: RH_m, balanced reuse factors,
+                       multiplier (DSP) demand, steady-state utilization
+  table2_latency     — paper Table 2: measured CPU (this machine, jitted
+                       JAX) vs the calibrated Eq-1 FPGA model, T=1..64
+  table3_energy      — paper Table 3: energy/timestep from the same runs
+  schedule_compare   — dataflow (wavefront) vs layer-by-layer on the
+                       paper's own cycle model — isolates the temporal-
+                       parallelism win from platform effects
+  wavefront_throughput — single-device wavefront vs sequential wall time
+  roofline_cells     — §Roofline summary over experiments/dryrun artifacts
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, *args, iters: int = 50, warmup: int = 5) -> float:
+    """Median wall time per call in microseconds (post-warmup, jitted)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(times)
+
+
+def table1_resources() -> list[str]:
+    from repro.config import get_config
+    from repro.core.balancing import balance_model, total_multipliers, utilization
+    from repro.core.latency import PAPER_RH_M
+
+    rows = []
+    for name, rh_m in PAPER_RH_M.items():
+        bal = balance_model(get_config(name).lstm_ae, rh_m)
+        rhs = "/".join(str(b.rh) for b in bal)
+        rows.append(
+            f"table1.{name},0.0,"
+            f"RH_m={rh_m};RH_i={rhs};multipliers={total_multipliers(bal):.0f};"
+            f"utilization={utilization(bal):.3f};Lat_t={bal[0].lat_t}"
+        )
+    return rows
+
+
+_T_STEPS = (1, 2, 4, 6, 16, 64)
+
+
+def _measure_cpu_lstm_ae(name: str) -> dict[int, float]:
+    """Median jitted CPU latency (us) of the full LSTM-AE forward per T."""
+    from repro.config import get_config
+    from repro.core import init_lstm_ae, lstm_ae_sequential
+
+    cfg = get_config(name)
+    params = init_lstm_ae(jax.random.PRNGKey(0), cfg)
+    f = cfg.lstm_ae.input_features
+    out = {}
+    fwd = jax.jit(lambda p, xs: lstm_ae_sequential(p, xs))
+    for t in _T_STEPS:
+        xs = jax.random.normal(jax.random.PRNGKey(1), (t, 1, f))
+        out[t] = _timeit(fwd, params, xs, iters=30, warmup=3)
+    return out
+
+
+def table2_latency() -> list[str]:
+    from repro.config import get_config
+    from repro.core.latency import PAPER_RH_M, fpga_latency_ms
+
+    rows = []
+    for name, rh_m in PAPER_RH_M.items():
+        cfg = get_config(name).lstm_ae
+        cpu = _measure_cpu_lstm_ae(name)
+        for t in _T_STEPS:
+            fpga_ms = fpga_latency_ms(cfg, t, rh_m).ms
+            cpu_ms = cpu[t] / 1e3
+            rows.append(
+                f"table2.{name}.T{t},{cpu[t]:.1f},"
+                f"fpga_model_ms={fpga_ms:.4f};cpu_ms={cpu_ms:.4f};"
+                f"speedup_vs_cpu={cpu_ms / fpga_ms:.1f}x"
+            )
+    return rows
+
+
+def table3_energy() -> list[str]:
+    from repro.config import get_config
+    from repro.core.latency import PAPER_RH_M, energy_per_timestep_mj, fpga_latency_ms
+
+    rows = []
+    for name, rh_m in PAPER_RH_M.items():
+        cfg = get_config(name).lstm_ae
+        cpu = _measure_cpu_lstm_ae(name)
+        for t in (1, 64):
+            fpga_ms = fpga_latency_ms(cfg, t, rh_m).ms
+            e_fpga = energy_per_timestep_mj(fpga_ms, t, "fpga")
+            e_cpu = energy_per_timestep_mj(cpu[t] / 1e3, t, "cpu")
+            rows.append(
+                f"table3.{name}.T{t},{cpu[t]:.1f},"
+                f"fpga_mj={e_fpga:.4f};cpu_mj={e_cpu:.3f};"
+                f"reduction={e_cpu / e_fpga:.0f}x"
+            )
+    return rows
+
+
+def schedule_compare() -> list[str]:
+    from repro.config import get_config
+    from repro.core.latency import PAPER_RH_M, speedup_table
+
+    rows = []
+    for name, rh_m in PAPER_RH_M.items():
+        for r in speedup_table(get_config(name).lstm_ae, rh_m, timesteps=(1, 16, 64)):
+            rows.append(
+                f"schedule.{name}.T{r['timesteps']},0.0,"
+                f"dataflow_cyc={r['dataflow_cycles']};seq_cyc={r['sequential_cycles']};"
+                f"temporal_speedup={r['speedup']:.2f}x"
+            )
+    return rows
+
+
+def wavefront_throughput() -> list[str]:
+    """Single-device wavefront vs layer-by-layer wall time (batched serve)."""
+    from repro.config import get_config
+    from repro.core import init_lstm_ae, lstm_ae_sequential, wavefront_forward
+
+    rows = []
+    for name in ("lstm-ae-f32-d6", "lstm-ae-f64-d6"):
+        cfg = get_config(name)
+        params = init_lstm_ae(jax.random.PRNGKey(0), cfg)
+        f = cfg.lstm_ae.input_features
+        xs = jax.random.normal(jax.random.PRNGKey(1), (64, 256, f))  # T=64, B=256
+        seq = jax.jit(lambda p, x: lstm_ae_sequential(p, x))
+        wav = jax.jit(lambda p, x: wavefront_forward(p, x))
+        t_seq = _timeit(seq, params, xs, iters=10, warmup=2)
+        t_wav = _timeit(wav, params, xs, iters=10, warmup=2)
+        rows.append(
+            f"wavefront.{name},{t_wav:.1f},"
+            f"sequential_us={t_seq:.1f};wavefront_us={t_wav:.1f};"
+            f"ratio={t_seq / t_wav:.2f}"
+        )
+    return rows
+
+
+def roofline_cells(dryrun_dir: str = "experiments/dryrun") -> list[str]:
+    rows = []
+    d = Path(dryrun_dir)
+    if not d.exists():
+        return ["roofline.missing,0.0,run `python -m repro.launch.dryrun` first"]
+    for f in sorted(d.glob("*__single_pod_16x16.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        frac = r["compute_s"] / total if total else 0.0
+        rows.append(
+            f"roofline.{r['arch']}.{r['shape']},0.0,"
+            f"dominant={r['dominant']};compute_s={r['compute_s']:.3g};"
+            f"memory_s={r['memory_s']:.3g};collective_s={r['collective_s']:.3g};"
+            f"compute_frac={frac:.3f};flops_ratio={r['flops_ratio']:.3f}"
+        )
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fn in (
+        table1_resources,
+        table2_latency,
+        table3_energy,
+        schedule_compare,
+        wavefront_throughput,
+        roofline_cells,
+    ):
+        for row in fn():
+            print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

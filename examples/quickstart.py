@@ -1,0 +1,60 @@
+"""Quickstart: the paper's full pipeline in ~2 minutes on CPU.
+
+1. Train an LSTM-AE (the paper's F32-D2 model) on benign synthetic
+   multivariate time-series.
+2. Calibrate an anomaly threshold on a benign validation split.
+3. Serve a mixed stream on the TEMPORAL-PARALLEL wavefront engine and
+   report detection quality.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig, get_config
+from repro.core.anomaly import calibrate_threshold, evaluate_detection
+from repro.data import TimeseriesConfig, make_batch
+from repro.models import build_model
+from repro.training import build_train_step, init_train_state
+
+
+def main():
+    model_cfg = get_config("lstm-ae-f32-d2")
+    api = build_model(model_cfg)
+    tc = TrainConfig(learning_rate=5e-3, warmup_steps=10, total_steps=150)
+
+    print(f"== training {model_cfg.name} on benign series ==")
+    state = init_train_state(api, jax.random.PRNGKey(0), tc)
+    step = jax.jit(build_train_step(api, tc))
+    data_cfg = TimeseriesConfig(features=32, seq_len=32, batch=64, anomaly_rate=0.0)
+    for i in range(tc.total_steps):
+        series, _ = make_batch(data_cfg, i)
+        state, metrics = step(state, {"series": series})
+        if i % 25 == 0 or i == tc.total_steps - 1:
+            print(f"step {i:4d}  mse={float(metrics['loss']):.4f}")
+
+    print("== calibrating threshold on benign validation ==")
+    score = jax.jit(lambda p, b: api.prefill(p, b)[0])  # wavefront engine
+    val, _ = make_batch(data_cfg, 10_000)
+    thr = calibrate_threshold(score(state.params, {"series": val}), k_sigma=3.0)
+    print(f"threshold = {thr:.4f}")
+
+    print("== serving a mixed stream (40% anomalous) ==")
+    test_cfg = TimeseriesConfig(features=32, seq_len=32, batch=256,
+                                anomaly_rate=0.4, seed=123)
+    series, labels = make_batch(test_cfg, 0)
+    errors = score(state.params, {"series": series})
+    report = evaluate_detection(errors, labels, thr)
+    print(f"precision={report.precision:.3f} recall={report.recall:.3f} "
+          f"f1={report.f1:.3f} auroc={report.auroc:.3f}")
+    assert report.auroc > 0.8, "detection quality regression"
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

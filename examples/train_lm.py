@@ -1,0 +1,76 @@
+"""Train a language model end-to-end with the full production stack:
+sharded train step, AdamW + cosine schedule, async checkpointing, fault
+recovery, and throughput reporting.
+
+Default is CPU-sized (~7M params, 100 steps, a couple of minutes); pass
+``--full`` for a ~100M-parameter run (hours on CPU — sized for a real
+accelerator).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+
+from repro.config import TrainConfig, reduced_config
+from repro.data import LMDataConfig, LMIterator
+from repro.distributed.fault import FailureInjector, HeartbeatMonitor, run_with_recovery
+from repro.models import build_model
+from repro.training import build_train_step, init_train_state
+from repro.utils import tree_size
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--full", action="store_true", help="~100M params")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-failure", action="store_true",
+                    help="kill the job mid-run to demo recovery")
+    args = ap.parse_args()
+
+    cfg = reduced_config("tinyllama-1.1b")
+    if args.full:
+        cfg = cfg.with_overrides(
+            num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+            d_ff=2048, vocab_size=32000, name="tinyllama-100m",
+        )
+    else:
+        cfg = cfg.with_overrides(
+            num_layers=4, d_model=256, num_heads=8, num_kv_heads=2,
+            d_ff=704, vocab_size=2048, name="tinyllama-7m",
+        )
+    api = build_model(cfg)
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=20,
+                     total_steps=args.steps, loss_chunk=128)
+    state = init_train_state(api, jax.random.PRNGKey(0), tc)
+    print(f"model {cfg.name}: {tree_size(state.params)/1e6:.1f}M params")
+
+    step = jax.jit(build_train_step(api, tc))
+    it = LMIterator(LMDataConfig(vocab_size=cfg.vocab_size, seq_len=256,
+                                 global_batch=8))
+    injector = FailureInjector((args.steps // 2,)) if args.inject_failure else None
+    monitor = HeartbeatMonitor()
+
+    t0 = time.perf_counter()
+    state, losses = run_with_recovery(
+        state=state, train_step=step, iterator=it, total_steps=args.steps,
+        ckpt_dir=args.ckpt_dir, ckpt_every=25, injector=injector, monitor=monitor,
+    )
+    dt = time.perf_counter() - t0
+    tokens = args.steps * 8 * 256
+    print(f"trained {args.steps} steps in {dt:.1f}s "
+          f"({tokens/dt:,.0f} tok/s); loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    if monitor.stragglers():
+        print("stragglers:", monitor.stragglers())
+    assert losses[-1] < losses[0], "no learning signal"
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: temporal-parallel dataflow execution for recurrent autoencoders.
+
+JAX/TPU reproduction + extension of "Exploiting temporal parallelism for
+LSTM Autoencoder acceleration on FPGA" — see DESIGN.md.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,15 @@
+from repro.checkpoint.manager import (
+    AsyncCheckpointer,
+    latest_checkpoint,
+    list_checkpoints,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "AsyncCheckpointer",
+    "latest_checkpoint",
+    "list_checkpoints",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,5 @@
+"""One module per selectable architecture (``--arch <id>``).
+
+Each module defines ``CONFIG`` (exact published dims, per the assignment) and
+``reduced()`` (same family, smoke-test sized, CPU-runnable).
+"""

@@ -1,0 +1,18 @@
+"""LSTM-AE-F32-D2 — the paper's smallest model: 2 layers, 32->16->32 features.
+
+Paper Section 4.1, Table 1: RH_m = 1 on the ZCU104.
+"""
+from repro.config.core import LSTMAEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="lstm-ae-f32-d2",
+    family="lstm_ae",
+    num_layers=2,
+    lstm_ae=LSTMAEConfig(input_features=32, depth=2),
+    subquadratic=True,
+)
+
+
+def reduced() -> ModelConfig:
+    # Already CPU-sized; the reduced config is the config itself.
+    return CONFIG.with_overrides(name="lstm-ae-f32-d2-reduced")

@@ -1,0 +1,17 @@
+"""LSTM-AE-F32-D6 — 6 layers, 32->16->8->4->8->16->32 features.
+
+Paper Section 4.1, Table 1: RH_m = 1 on the ZCU104.
+"""
+from repro.config.core import LSTMAEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="lstm-ae-f32-d6",
+    family="lstm_ae",
+    num_layers=6,
+    lstm_ae=LSTMAEConfig(input_features=32, depth=6),
+    subquadratic=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(name="lstm-ae-f32-d6-reduced")

@@ -1,0 +1,17 @@
+"""LSTM-AE-F64-D2 — 2 layers, 64->32->64 features.
+
+Paper Section 4.1, Table 1: RH_m = 4 on the ZCU104.
+"""
+from repro.config.core import LSTMAEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="lstm-ae-f64-d2",
+    family="lstm_ae",
+    num_layers=2,
+    lstm_ae=LSTMAEConfig(input_features=64, depth=2),
+    subquadratic=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(name="lstm-ae-f64-d2-reduced")

@@ -1,0 +1,95 @@
+"""Analytical latency / energy model (paper Section 3.2 + Tables 1-3).
+
+``fpga_latency_ms`` evaluates Eq (1) at the paper's 300 MHz clock.  The raw
+Eq-1 cycle count is idealised: regressing the paper's own Table 2 against it
+shows an empirical cycles-per-timestep ~4.2x Eq-2 (FIFO handshakes,
+activation-unit initiation interval, AXI streaming) plus a ~33 us constant
+invocation overhead (DMA + kernel start).  Both calibration constants are
+exposed and recorded in EXPERIMENTS.md; setting them to (1.0, 0.0) gives the
+pure-Eq-1 model.
+
+Energy model: E_per_timestep = P * latency / T with the paper's measured
+powers (FPGA 11.5 W, CPU 260 W, GPU 37.5 W midpoints).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.config.core import LSTMAEConfig
+from repro.core.balancing import (
+    LayerBalance,
+    accelerator_latency_cycles,
+    balance_model,
+    sequential_latency_cycles,
+)
+
+CLOCK_HZ = 300e6
+
+# Calibrated against paper Table 2 (see EXPERIMENTS.md §Paper-model fit).
+DEFAULT_CYCLE_FACTOR = 4.2       # empirical cycles-per-timestep multiplier
+DEFAULT_OVERHEAD_US = 33.0       # invocation overhead (DMA, kernel start)
+
+POWER_W = {"fpga": 11.5, "cpu": 260.0, "gpu": 37.5}
+
+# Table 1: the paper's chosen bottleneck reuse factors per model.
+PAPER_RH_M = {
+    "lstm-ae-f32-d2": 1,
+    "lstm-ae-f64-d2": 4,
+    "lstm-ae-f32-d6": 1,
+    "lstm-ae-f64-d6": 8,
+}
+
+
+@dataclass(frozen=True)
+class LatencyEstimate:
+    timesteps: int
+    cycles: int
+    ms: float
+    schedule: str            # "dataflow" (Eq 1) or "sequential"
+
+
+def fpga_latency_ms(
+    cfg: LSTMAEConfig,
+    timesteps: int,
+    rh_m: int,
+    *,
+    schedule: str = "dataflow",
+    cycle_factor: float = DEFAULT_CYCLE_FACTOR,
+    overhead_us: float = DEFAULT_OVERHEAD_US,
+) -> LatencyEstimate:
+    balances = balance_model(cfg, rh_m)
+    if schedule == "dataflow":
+        cycles = accelerator_latency_cycles(timesteps, balances)
+    elif schedule == "sequential":
+        cycles = sequential_latency_cycles(timesteps, balances)
+    else:
+        raise ValueError(schedule)
+    ms = (cycles * cycle_factor / CLOCK_HZ) * 1e3 + overhead_us * 1e-3
+    return LatencyEstimate(timesteps=timesteps, cycles=cycles, ms=ms, schedule=schedule)
+
+
+def energy_per_timestep_mj(latency_ms: float, timesteps: int, platform: str) -> float:
+    return POWER_W[platform] * latency_ms / max(1, timesteps)
+
+
+def speedup_table(
+    cfg: LSTMAEConfig, rh_m: int, timesteps: tuple[int, ...] = (1, 2, 4, 6, 16, 64)
+) -> list[dict]:
+    """Dataflow-vs-sequential latency on the paper's own cycle model —
+    isolates the temporal-parallelism win from platform effects."""
+    rows = []
+    for t in timesteps:
+        df = fpga_latency_ms(cfg, t, rh_m, schedule="dataflow")
+        sq = fpga_latency_ms(cfg, t, rh_m, schedule="sequential")
+        rows.append(
+            {
+                "timesteps": t,
+                "dataflow_ms": df.ms,
+                "sequential_ms": sq.ms,
+                # schedule win on raw cycles (platform overheads excluded)
+                "speedup": sq.cycles / df.cycles,
+                "dataflow_cycles": df.cycles,
+                "sequential_cycles": sq.cycles,
+            }
+        )
+    return rows

@@ -1,0 +1,183 @@
+"""LSTM cell / layer / autoencoder — the paper's model family (Section 2).
+
+Gate order is (i, f, g, o) as in Figure 1 of the paper:
+
+    i = sigmoid(Wxi x + Whi h + b)      f = sigmoid(...)
+    g = tanh(...)                        o = sigmoid(...)
+    c' = f*c + i*g                       h' = o * tanh(c')
+
+The two MVMs (on x_t and on h_{t-1}) are kept separable — ``MVM_X`` and
+``MVM_H`` in the paper's accelerator — so the reuse-factor latency model in
+core/balancing.py maps one-to-one onto this code, and the fused Pallas
+kernel (kernels/lstm_cell.py) can fuse them for the MXU.
+
+The paper uses Q8.24 fixed point with piecewise-linear (PWL) sigmoid/tanh;
+``pwl=True`` reproduces that approximation for fidelity experiments.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import ModelConfig
+from repro.utils import Params, split_keys, truncated_normal_init
+
+
+def pwl_sigmoid(x: jnp.ndarray) -> jnp.ndarray:
+    """Piecewise-linear sigmoid (hard sigmoid), the paper's HLS approximation."""
+    return jnp.clip(0.25 * x + 0.5, 0.0, 1.0)
+
+
+def pwl_tanh(x: jnp.ndarray) -> jnp.ndarray:
+    """Piecewise-linear tanh (hard tanh)."""
+    return jnp.clip(x, -1.0, 1.0)
+
+
+def _acts(pwl: bool):
+    if pwl:
+        return pwl_sigmoid, pwl_tanh
+    return jax.nn.sigmoid, jnp.tanh
+
+
+def init_lstm_cell(key: jax.Array, input_size: int, hidden_size: int) -> Params:
+    kx, kh = jax.random.split(key)
+    return {
+        "wx": truncated_normal_init(kx, (input_size, 4 * hidden_size), fan_in=input_size),
+        "wh": truncated_normal_init(kh, (hidden_size, 4 * hidden_size), fan_in=hidden_size),
+        "b": jnp.zeros((4 * hidden_size,), jnp.float32),
+    }
+
+
+def lstm_cell_specs() -> Params:
+    return {"wx": (None, "tp"), "wh": (None, "tp"), "b": ("tp",)}
+
+
+def lstm_cell(
+    params: Params,
+    x: jnp.ndarray,
+    h: jnp.ndarray,
+    c: jnp.ndarray,
+    pwl: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One timestep.  x: (B, In); h, c: (B, H) -> (h', c')."""
+    sig, tnh = _acts(pwl)
+    hidden = h.shape[-1]
+    gx = x @ params["wx"].astype(x.dtype)          # MVM_X
+    gh = h @ params["wh"].astype(h.dtype)          # MVM_H
+    gates = (gx + gh + params["b"].astype(x.dtype)).astype(jnp.float32)
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = sig(f) * c.astype(jnp.float32) + sig(i) * tnh(g)
+    h_new = sig(o) * tnh(c_new)
+    return h_new.astype(h.dtype), c_new.astype(c.dtype)
+
+
+def lstm_layer(
+    params: Params,
+    xs: jnp.ndarray,
+    h0: Optional[jnp.ndarray] = None,
+    c0: Optional[jnp.ndarray] = None,
+    pwl: bool = False,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Scan one LSTM layer over time.  xs: (T, B, In) -> ys (T, B, H)."""
+    b = xs.shape[1]
+    hidden = params["wh"].shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((b, hidden), xs.dtype)
+    if c0 is None:
+        c0 = jnp.zeros((b, hidden), jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell(params, x_t, h, c, pwl=pwl)
+        return (h, c), h
+
+    (h, c), ys = jax.lax.scan(step, (h0, c0), xs)
+    return ys, (h, c)
+
+
+class LSTMAEParams(NamedTuple):
+    layers: tuple[Params, ...]
+
+
+def init_lstm_ae(key: jax.Array, cfg: ModelConfig) -> Params:
+    """The paper's LSTM-AE: stacked seq-to-seq LSTM layers (encoder halves
+    features to the bottleneck, decoder doubles back; final layer width =
+    input width, reconstructing x_t per timestep)."""
+    ae = cfg.lstm_ae
+    sizes = ae.layer_sizes()
+    in_sizes = ae.layer_input_sizes()
+    keys = jax.random.split(key, len(sizes))
+    layers = tuple(
+        init_lstm_cell(k, i, h) for k, i, h in zip(keys, in_sizes, sizes)
+    )
+    return {"layers": layers}
+
+
+def lstm_ae_specs(cfg: ModelConfig) -> Params:
+    return {"layers": tuple(lstm_cell_specs() for _ in cfg.lstm_ae.layer_sizes())}
+
+
+def lstm_ae_sequential(
+    params: Params, xs: jnp.ndarray, pwl: bool = False
+) -> jnp.ndarray:
+    """Layer-by-layer execution (the traditional schedule the paper compares
+    against): layer i runs over ALL timesteps before layer i+1 starts.
+    xs: (T, B, F) -> reconstruction (T, B, F)."""
+    ys = xs
+    for layer in params["layers"]:
+        ys, _ = lstm_layer(layer, ys, pwl=pwl)
+    return ys
+
+
+def lstm_ae_reconstruction_error(
+    params: Params, xs: jnp.ndarray, pwl: bool = False
+) -> jnp.ndarray:
+    """Per-sequence mean squared reconstruction error: (B,)."""
+    recon = lstm_ae_sequential(params, xs, pwl=pwl)
+    err = jnp.mean(jnp.square(recon.astype(jnp.float32) - xs.astype(jnp.float32)), axis=(0, 2))
+    return err
+
+
+def stacked_cell_params(
+    layer_params: Sequence[Params],
+    in_max: Optional[int] = None,
+    h_max: Optional[int] = None,
+) -> tuple[Params, tuple, tuple]:
+    """Zero-pad per-layer cells to common (In_max, H_max) and stack.
+
+    Returns (stacked params {wx (N,In,4H), wh (N,H,4H), b (N,4H)},
+    in_sizes (N,), hidden_sizes (N,)).  Zero padding is exact AND
+    gate-aligned: each of the four gate column blocks is padded to h_max
+    separately, so gate boundaries stay at multiples of h_max.  Padded
+    input rows/hidden columns contribute nothing to valid gates, and
+    downstream layers' padded wx rows null out any padded h values.
+    ``in_max``/``h_max`` may be given explicitly (stage grouping pads
+    sub-groups to the model-global dims).
+    """
+    in_sizes = tuple(p["wx"].shape[0] for p in layer_params)
+    hid_sizes = tuple(p["wh"].shape[0] for p in layer_params)
+    in_max = in_max or max(in_sizes)
+    h_max = h_max or max(hid_sizes)
+
+    def pad_cell(p: Params) -> Params:
+        i, h4 = p["wx"].shape
+        h = p["wh"].shape[0]
+        hh = h4 // 4
+        # wx/wh columns are 4 gate blocks: pad each gate block to h_max
+        def pad_gates(w, rows_to):
+            blocks = jnp.split(w, 4, axis=1)
+            blocks = [jnp.pad(b_, ((0, rows_to - w.shape[0]), (0, h_max - hh))) for b_ in blocks]
+            return jnp.concatenate(blocks, axis=1)
+        return {
+            "wx": pad_gates(p["wx"], in_max),
+            "wh": pad_gates(p["wh"], h_max),
+            "b": jnp.concatenate(
+                [jnp.pad(b_, (0, h_max - hh)) for b_ in jnp.split(p["b"], 4)]
+            ),
+        }
+
+    padded = [pad_cell(p) for p in layer_params]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+    return stacked, in_sizes, hid_sizes

@@ -1,0 +1,12 @@
+from repro.data.lm import LMDataConfig, LMIterator, host_slice, make_lm_batch
+from repro.data.timeseries import TimeseriesConfig, TimeseriesIterator, make_batch
+
+__all__ = [
+    "LMDataConfig",
+    "LMIterator",
+    "TimeseriesConfig",
+    "TimeseriesIterator",
+    "host_slice",
+    "make_batch",
+    "make_lm_batch",
+]

@@ -1,0 +1,33 @@
+from repro.distributed.fault import (
+    FailureInjector,
+    HeartbeatMonitor,
+    SimulatedFailure,
+    run_with_recovery,
+)
+from repro.distributed.sharding import (
+    ShardingRules,
+    active_mesh,
+    active_rules,
+    constrain,
+    is_spec_leaf,
+    map_specs,
+    mesh_context,
+    rules_for_mesh,
+    spec_tree_to_shardings,
+)
+
+__all__ = [
+    "FailureInjector",
+    "HeartbeatMonitor",
+    "ShardingRules",
+    "SimulatedFailure",
+    "active_mesh",
+    "active_rules",
+    "constrain",
+    "is_spec_leaf",
+    "map_specs",
+    "mesh_context",
+    "rules_for_mesh",
+    "run_with_recovery",
+    "spec_tree_to_shardings",
+]

@@ -1,0 +1,118 @@
+"""Causal flash-attention forward Pallas TPU kernel [arXiv:2205.14135,
+adapted to the TPU grid model].
+
+Grid: (B*H, nQ, nK) with the KV axis innermost; the online-softmax
+accumulators (acc, m, l) live in VMEM scratch and persist across the nK
+steps of each (batch-head, q-block) pair — TPU grids execute sequentially,
+which substitutes for FA's explicit inner loop.  Causal wedge: KV blocks
+strictly above the diagonal are skipped via ``pl.when`` predication (on
+TPU this skips the MXU work; the triangular FLOP saving the XLA fallback
+path only gets via the q-chunk wedge in layers/attention.py).
+
+VMEM per step: q (Qb x d) + k,v (Kb x d) + scores (Qb x Kb) + acc (Qb x d)
+— with Qb=Kb=512, d=128 in bf16/f32 about 3.3 MB, comfortably inside the
+~16 MB VMEM budget, and MXU-aligned (multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, block_q: int, block_k: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: skip blocks entirely above the diagonal
+    run = (qi * block_q + block_q - 1) >= (ki * block_k) if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[...]                        # (Qb, d)
+        k = k_ref[...]                        # (Kb, d)
+        v = v_ref[...]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                             # (Qb, Kb)
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,       # (B, H, S, d)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, s, d = q.shape
+    sk = k.shape[2]
+    block_q = min(block_q, s)
+    block_k = min(block_k, sk)
+    assert s % block_q == 0 and sk % block_k == 0
+    grid = (b * h, s // block_q, sk // block_k)
+    scale = 1.0 / math.sqrt(d)
+
+    qr = q.reshape(b * h, s, d)
+    kr = k.reshape(b * h, sk, d)
+    vr = v.reshape(b * h, sk, d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k, causal=causal
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),     # m (running max)
+            pltpu.VMEM((block_q,), jnp.float32),     # l (running sum)
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d)

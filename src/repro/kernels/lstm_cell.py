@@ -1,0 +1,111 @@
+"""Fused LSTM-cell Pallas TPU kernel — the paper's MVM_X/MVM_H + gates +
+element-wise unit as ONE kernel.
+
+TPU adaptation of the paper's per-module datapath (DESIGN.md §2):
+
+* MVM_X and MVM_H are fused into one MXU pass over the concatenated
+  ``[x_t, h_{t-1}]`` — the Eq-7 "equal latency of the two MVMs" becomes
+  a single matmul whose contraction covers both operands.
+* The hidden-block size ``block_h`` is the reuse-factor analogue: it sets
+  how many of the 4*LH gate MACs execute in parallel per VMEM tile
+  (paper Eq 5/6: M = 4*LH/R), trading VMEM footprint for parallelism.
+* The activation + element-wise unit runs on the VPU in the same kernel
+  (the paper's pipelined Activations/Element-Wise stage).
+
+Weights layout: wx (4, In, H), wh (4, H, H), b (4, H) — gate-major so each
+grid step loads only its gate-block columns (BRAM-partitioning analogue).
+
+Grid: (B / block_b, H / block_h).  Per step the kernel computes all four
+gate slices for its (batch, hidden) tile and updates (h, c) in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                      h_out_ref, c_out_ref, *, pwl: bool):
+    x = x_ref[...]          # (Bb, In)
+    h = h_ref[...]          # (Bb, H)  (full hidden needed for MVM_H)
+    c = c_ref[...]          # (Bb, Hb)
+    wx = wx_ref[...]        # (4, In, Hb)
+    wh = wh_ref[...]        # (4, H, Hb)
+    b = b_ref[...]          # (4, Hb)
+
+    def mvm(g):
+        # fused MVM_X + MVM_H for gate g on this hidden block
+        gx = jnp.dot(x, wx[g], preferred_element_type=jnp.float32)
+        gh = jnp.dot(h, wh[g], preferred_element_type=jnp.float32)
+        return gx + gh + b[g].astype(jnp.float32)
+
+    i_g, f_g, g_g, o_g = mvm(0), mvm(1), mvm(2), mvm(3)
+    if pwl:
+        sig = lambda t: jnp.clip(0.25 * t + 0.5, 0.0, 1.0)
+        tnh = lambda t: jnp.clip(t, -1.0, 1.0)
+    else:
+        sig = jax.nn.sigmoid
+        tnh = jnp.tanh
+    c_new = sig(f_g) * c.astype(jnp.float32) + sig(i_g) * tnh(g_g)
+    h_new = sig(o_g) * tnh(c_new)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+
+
+def lstm_cell_pallas(
+    x: jnp.ndarray,         # (B, In)
+    h: jnp.ndarray,         # (B, H)
+    c: jnp.ndarray,         # (B, H)
+    wx: jnp.ndarray,        # (4, In, H)
+    wh: jnp.ndarray,        # (4, H, H)
+    b: jnp.ndarray,         # (4, H)
+    *,
+    block_b: int = 128,
+    block_h: int = 128,
+    pwl: bool = False,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    bsz, in_dim = x.shape
+    hidden = h.shape[1]
+    block_b = min(block_b, bsz)
+    block_h = min(block_h, hidden)
+    assert bsz % block_b == 0 and hidden % block_h == 0
+    grid = (bsz // block_b, hidden // block_h)
+
+    kernel = functools.partial(_lstm_cell_kernel, pwl=pwl)
+    h_new, c_new = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, in_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, hidden), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, block_h), lambda i, j: (i, j)),
+            pl.BlockSpec((4, in_dim, block_h), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((4, hidden, block_h), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((4, block_h), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, block_h), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, block_h), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, hidden), h.dtype),
+            jax.ShapeDtypeStruct((bsz, hidden), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, h, c, wx, wh, b)
+    return h_new, c_new
+
+
+def pack_weights(params: dict) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Convert core/lstm.py layout {wx (In,4H), wh (H,4H), b (4H,)} to the
+    kernel's gate-major (4, In, H) / (4, H, H) / (4, H)."""
+    in_dim, h4 = params["wx"].shape
+    hidden = h4 // 4
+    wx = jnp.stack(jnp.split(params["wx"], 4, axis=1))   # (4, In, H)
+    wh = jnp.stack(jnp.split(params["wh"], 4, axis=1))   # (4, H, H)
+    b = jnp.stack(jnp.split(params["b"], 4))             # (4, H)
+    return wx, wh, b

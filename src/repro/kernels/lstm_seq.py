@@ -1,0 +1,113 @@
+"""Sequence-streaming LSTM Pallas TPU kernel — the paper's temporal
+dataflow INSIDE one kernel.
+
+Where ``lstm_cell.py`` fuses one timestep, this kernel keeps (h, c)
+resident in VMEM scratch and streams ALL timesteps of a layer through the
+MXU — the per-module half of the paper's architecture (weights stationary
+in VMEM = BRAM-resident weights; the FIFO to the next layer is the written
+output stream).  HBM traffic per layer drops from
+O(T·(x + h + gates + state)) for the XLA scan to O(T·(x + h_out)) + one
+weight read.
+
+Grid: (B / block_b,).  VMEM per step: weights 4·H·(In+H) + streams
+(block_b, In/H) + state — e.g. In=H=256, block_b=256: ~2.3 MB, MXU-aligned.
+
+Layout matches core/lstm.py via kernels/lstm_cell.pack_weights: wx
+(4, In, H), wh (4, H, H), b (4, H).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lstm_seq_kernel(xs_ref, h0_ref, c0_ref, wx_ref, wh_ref, b_ref,
+                     ys_ref, h_out_ref, c_out_ref, h_scr, c_scr,
+                     *, t_len: int, pwl: bool):
+    wx = wx_ref[...]          # (4, In, H)
+    wh = wh_ref[...]          # (4, H, H)
+    b = b_ref[...]            # (4, H)
+    h_scr[...] = h0_ref[...].astype(jnp.float32)
+    c_scr[...] = c0_ref[...].astype(jnp.float32)
+
+    if pwl:
+        sig = lambda t: jnp.clip(0.25 * t + 0.5, 0.0, 1.0)
+        tnh = lambda t: jnp.clip(t, -1.0, 1.0)
+    else:
+        sig = jax.nn.sigmoid
+        tnh = jnp.tanh
+
+    def step(t, _):
+        x_t = xs_ref[t, :, :]                  # (Bb, In)
+        h = h_scr[...]
+        c = c_scr[...]
+
+        def gate(g):
+            gx = jnp.dot(x_t, wx[g], preferred_element_type=jnp.float32)
+            gh = jnp.dot(h.astype(x_t.dtype), wh[g], preferred_element_type=jnp.float32)
+            return gx + gh + b[g].astype(jnp.float32)
+
+        i_g, f_g, g_g, o_g = gate(0), gate(1), gate(2), gate(3)
+        c_new = sig(f_g) * c + sig(i_g) * tnh(g_g)
+        h_new = sig(o_g) * tnh(c_new)
+        h_scr[...] = h_new
+        c_scr[...] = c_new
+        ys_ref[t, :, :] = h_new.astype(ys_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, t_len, step, 0)
+    h_out_ref[...] = h_scr[...].astype(h_out_ref.dtype)
+    c_out_ref[...] = c_scr[...].astype(c_out_ref.dtype)
+
+
+def lstm_seq_pallas(
+    xs: jnp.ndarray,      # (T, B, In)
+    h0: jnp.ndarray,      # (B, H)
+    c0: jnp.ndarray,      # (B, H) f32
+    wx: jnp.ndarray,      # (4, In, H)
+    wh: jnp.ndarray,      # (4, H, H)
+    b: jnp.ndarray,       # (4, H)
+    *,
+    block_b: int = 256,
+    pwl: bool = False,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    t_len, bsz, in_dim = xs.shape
+    hidden = h0.shape[1]
+    block_b = min(block_b, bsz)
+    assert bsz % block_b == 0
+    grid = (bsz // block_b,)
+    kernel = functools.partial(_lstm_seq_kernel, t_len=t_len, pwl=pwl)
+
+    ys, h_out, c_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_len, block_b, in_dim), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_b, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((4, in_dim, hidden), lambda i: (0, 0, 0)),
+            pl.BlockSpec((4, hidden, hidden), lambda i: (0, 0, 0)),
+            pl.BlockSpec((4, hidden), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t_len, block_b, hidden), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_b, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, hidden), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_len, bsz, hidden), xs.dtype),
+            jax.ShapeDtypeStruct((bsz, hidden), h0.dtype),
+            jax.ShapeDtypeStruct((bsz, hidden), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, hidden), jnp.float32),  # h
+            pltpu.VMEM((block_b, hidden), jnp.float32),  # c
+        ],
+        interpret=interpret,
+    )(xs, h0, c0, wx, wh, b)
+    return ys, (h_out, c_out)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each ref_* mirrors its kernel's signature exactly; tests sweep shapes and
+dtypes and assert kernel(interpret=True) == ref to tight tolerances.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_lstm_cell(x, h, c, wx, wh, b, *, pwl: bool = False):
+    """x (B,In); h,c (B,H); wx (4,In,H); wh (4,H,H); b (4,H)."""
+    if pwl:
+        sig = lambda t: jnp.clip(0.25 * t + 0.5, 0.0, 1.0)
+        tnh = lambda t: jnp.clip(t, -1.0, 1.0)
+    else:
+        sig, tnh = jax.nn.sigmoid, jnp.tanh
+    gates = (
+        jnp.einsum("bi,gio->gbo", x, wx)
+        + jnp.einsum("bh,gho->gbo", h, wh)
+        + b[:, None, :]
+    ).astype(jnp.float32)
+    i_g, f_g, g_g, o_g = gates[0], gates[1], gates[2], gates[3]
+    c_new = sig(f_g) * c.astype(jnp.float32) + sig(i_g) * tnh(g_g)
+    h_new = sig(o_g) * tnh(c_new)
+    return h_new.astype(h.dtype), c_new.astype(jnp.float32)
+
+
+def ref_wkv6(r, k, v, w, u, s0):
+    """r/k/v/w (B,T,H,hd); u (H,hd); s0 (B,H,hd,hd) f32."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None].astype(jnp.float32) * v_t[..., None, :].astype(jnp.float32)
+        y_t = jnp.einsum(
+            "bhk,bhkv->bhv", r_t.astype(jnp.float32),
+            s + u[None, :, :, None].astype(jnp.float32) * kv,
+        )
+        s = w_t[..., :, None].astype(jnp.float32) * s + kv
+        return s, y_t
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s  # (B,T,H,hd) f32, final state
+
+
+def ref_attention(q, k, v, *, causal: bool = True):
+    """q/k/v (B,H,S,d) -> (B,H,S,d); exact softmax in fp32."""
+    b, h, s, d = q.shape
+    sk = k.shape[2]
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, sk), bool), k=sk - s)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum(
+        "bhqk,bhkd->bhqd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    ).astype(q.dtype)

@@ -1,0 +1,8 @@
+"""Launchers: mesh construction, multi-pod dry-run, training CLI.
+
+NOTE: do not import repro.launch.dryrun from library code — it sets
+XLA_FLAGS at import time (by design, per the dry-run contract).
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  Everything below is ordinary code.
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import TrainConfig, get_config, list_archs, shapes_for
+from repro.config.core import ShapeConfig
+from repro.distributed.sharding import (
+    rules_for_mesh,
+    spec_tree_to_shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, cache_struct, input_specs
+from repro.models.api import ModelAPI
+from repro.roofline.extract import build_report, model_flops_estimate
+from repro.serving import build_decode_step, build_prefill_step
+from repro.training import build_train_step, init_train_state, train_state_specs
+
+
+def _batch_shardings(specs: dict, mesh, rules):
+    """Input batches: leading dim is the global batch -> P(batch, ...)."""
+    out = {}
+    for name, sds in specs.items():
+        if name == "cache_len":
+            out[name] = NamedSharding(mesh, P())
+        else:
+            out[name] = NamedSharding(
+                mesh, rules.spec(("batch",) + (None,) * (len(sds.shape) - 1))
+            )
+    return out
+
+
+def _sanitize(shardings_tree, struct_tree, mesh):
+    """Null out sharded dims that don't divide evenly (jit arg shardings
+    require divisibility; e.g. whisper's 51866 vocab over 16, or the
+    long_500k global_batch=1 over the data axis)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(sh, sds):
+        if not isinstance(sh, NamedSharding):
+            return sh
+        new = []
+        changed = False
+        for i, axes in enumerate(tuple(sh.spec)):
+            if axes is None:
+                new.append(None)
+                continue
+            ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+            size = 1
+            for a in ax_tuple:
+                size *= axis_sizes[a]
+            if i >= len(sds.shape) or sds.shape[i] % size != 0:
+                new.append(None)
+                changed = True
+            else:
+                new.append(axes)
+        return NamedSharding(mesh, P(*new)) if changed else sh
+
+    return jax.tree.map(fix, shardings_tree, struct_tree)
+
+
+def lower_cell(arch: str, shape: ShapeConfig, multi_pod: bool, opt: bool = False):
+    """Build + lower + compile one (arch x shape x mesh) cell.
+
+    ``opt=False`` is the baseline configuration (naive settings); ``opt=True``
+    applies the §Perf hillclimb levers (causal-wedge q-chunking, unrolled
+    decode cache updates).  Returns (compiled, lowered, mesh, api).
+    """
+    cfg = get_config(arch)
+    if opt:
+        import dataclasses
+        cfg = cfg.with_overrides(decode_loop="unroll", bwd_constrain=True)
+        if cfg.rwkv is not None:
+            cfg = cfg.with_overrides(
+                rwkv=dataclasses.replace(cfg.rwkv, scan_impl="chunked")
+            )
+        if cfg.moe is not None:
+            cfg = cfg.with_overrides(
+                moe=dataclasses.replace(cfg.moe, impl="ep_a2a")
+            )
+    api = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for_mesh(mesh)
+    specs = input_specs(cfg, shape)
+    batch_sh = _sanitize(_batch_shardings(specs, mesh, rules), specs, mesh)
+    param_struct_ = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    param_sh = _sanitize(
+        spec_tree_to_shardings(mesh, rules, api.param_specs()), param_struct_, mesh
+    )
+    q_chunks = 8 if (opt and shape.seq_len >= 8192) else 1
+
+    if shape.kind == "train":
+        tc = TrainConfig()
+        step = build_train_step(api, tc, mesh, rules)
+        state_struct = jax.eval_shape(
+            lambda: init_train_state(api, jax.random.PRNGKey(0), tc)
+        )
+        state_sh = _sanitize(
+            spec_tree_to_shardings(mesh, rules, train_state_specs(api, tc)),
+            state_struct, mesh,
+        )
+        lowered = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        ).lower(state_struct, specs)
+
+    elif shape.kind == "prefill":
+        step = build_prefill_step(api, mesh, rules, q_chunks=q_chunks)
+        lowered = jax.jit(
+            step,
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=None,
+        ).lower(param_struct_, specs)
+
+    else:  # decode
+        step = build_decode_step(api, mesh, rules)
+        cache = cache_struct(api, shape.global_batch, shape.seq_len)
+        cache_sh = _sanitize(
+            spec_tree_to_shardings(mesh, rules, api.cache_specs()), cache, mesh
+        )
+        logits_struct = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1, cfg.vocab_size), jnp.dtype(cfg.compute_dtype)
+        )
+        logits_sh = _sanitize(
+            NamedSharding(mesh, rules.spec(("batch", None, "tp"))), logits_struct, mesh
+        )
+        lowered = jax.jit(
+            step,
+            in_shardings=(param_sh, batch_sh["token"], cache_sh, NamedSharding(mesh, P())),
+            out_shardings=(logits_sh, cache_sh),
+            donate_argnums=(2,),
+        ).lower(param_struct_, specs["token"], cache, specs["cache_len"])
+
+    compiled = lowered.compile()
+    return compiled, lowered, mesh, api
+
+
+def run_cell(arch: str, shape: ShapeConfig, multi_pod: bool, out_dir: Path,
+             opt: bool = False) -> dict:
+    mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    cell_id = f"{arch}__{shape.name}__{mesh_name}"
+    out_path = out_dir / f"{cell_id}.json"
+    if out_path.exists():
+        return json.loads(out_path.read_text())
+
+    t0 = time.time()
+    status = "ok"
+    try:
+        compiled, lowered, mesh, api = lower_cell(arch, shape, multi_pod, opt=opt)
+        chips = mesh.devices.size
+        try:
+            mem = compiled.memory_analysis()
+            mem_str = str(mem)
+        except Exception as e:  # CPU backend may not implement it
+            mem_str = f"unavailable on backend: {e}"
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        # persist the partitioned HLO (zstd) so the cost model can be
+        # re-applied without recompiling
+        try:
+            import zstandard
+
+            out_dir.mkdir(parents=True, exist_ok=True)
+            (out_dir / f"{cell_id}.hlo.zst").write_bytes(
+                zstandard.ZstdCompressor(level=6).compress(hlo.encode())
+            )
+        except Exception:
+            pass
+        cfg = get_config(arch)
+        report = build_report(
+            arch=arch,
+            shape=shape.name,
+            mesh_name=mesh_name,
+            chips=chips,
+            cost=cost,
+            hlo_text=hlo,
+            model_flops=model_flops_estimate(cfg, shape),
+            memory_analysis=mem_str,
+        )
+        record = json.loads(report.to_json())
+        record["status"] = status
+        record["compile_s"] = time.time() - t0
+        print(f"[dryrun] memory_analysis: {mem_str[:400]}", flush=True)
+        print(
+            f"[dryrun] cost_analysis: flops={cost.get('flops')} "
+            f"bytes={cost.get('bytes accessed')}",
+            flush=True,
+        )
+    except Exception as e:
+        record = {
+            "arch": arch,
+            "shape": shape.name,
+            "mesh": mesh_name,
+            "status": f"error: {e}",
+            "traceback": traceback.format_exc(),
+            "compile_s": time.time() - t0,
+        }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=1))
+    flag = record["status"] if record["status"] != "ok" else (
+        f"ok  dominant={record['dominant']} compute={record['compute_s']:.4g}s "
+        f"memory={record['memory_s']:.4g}s coll={record['collective_s']:.4g}s"
+    )
+    print(f"[dryrun] {cell_id}: {flag} ({record['compile_s']:.1f}s compile)", flush=True)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run launcher")
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all for arch)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply §Perf optimizations (baseline when absent)")
+    ap.add_argument("--list", action="store_true", help="list cells and exit")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    out_dir = Path(args.out)
+    cells = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            for mesh_flag in ([False, True] if args.mesh == "both" else [args.mesh == "multi"]):
+                cells.append((arch, shape, mesh_flag))
+
+    if args.list:
+        for arch, shape, mp in cells:
+            print(f"{arch} {shape.name} {'multi' if mp else 'single'}")
+        print(f"total: {len(cells)} cells")
+        return
+
+    n_ok = 0
+    for arch, shape, mp in cells:
+        rec = run_cell(arch, shape, mp, out_dir, opt=args.opt)
+        n_ok += rec["status"] == "ok"
+    print(f"[dryrun] {n_ok}/{len(cells)} cells ok")
+    if n_ok != len(cells):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

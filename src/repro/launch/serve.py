@@ -1,0 +1,93 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+
+Two modes, per model family:
+- LSTM-AE: streaming anomaly-detection service on the temporal-parallel
+  wavefront engine (the paper's deployment).
+- LM families: batched prefill + greedy decode of a few tokens (reduced
+  configs on CPU; full configs need a pod mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_config, list_archs, reduced_config
+from repro.data import TimeseriesConfig, make_batch
+from repro.models import build_model
+from repro.serving import greedy_decode_loop
+
+
+def serve_lstm_ae(cfg, args) -> None:
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    score = jax.jit(lambda p, b: api.prefill(p, b)[0])
+    data_cfg = TimeseriesConfig(features=cfg.lstm_ae.input_features,
+                                seq_len=args.seq_len, batch=args.batch,
+                                anomaly_rate=0.05)
+    series, _ = make_batch(data_cfg, 0)
+    jax.block_until_ready(score(params, {"series": series}))  # compile
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        series, _ = make_batch(data_cfg, i)
+        jax.block_until_ready(score(params, {"series": series}))
+    dt = time.perf_counter() - t0
+    steps = args.requests * args.batch * args.seq_len
+    print(f"[serve] {cfg.name}: {args.requests} requests, "
+          f"{dt/args.requests*1e3:.2f} ms/request, {steps/dt:,.0f} timesteps/s")
+
+
+def serve_lm(cfg, args) -> None:
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    b, s = args.batch, args.seq_len
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.family == "whisper":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "vision_stub":
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3), (b, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+
+    t0 = time.perf_counter()
+    logits, prefill_state = jax.jit(lambda p, bt: api.prefill(p, bt))(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    cache = api.init_cache(b, s + args.decode_tokens)
+    first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    t0 = time.perf_counter()
+    out_tokens, _ = jax.jit(
+        lambda p, c, f: greedy_decode_loop(api, p, c, f, jnp.int32(s), args.decode_tokens)
+    )(params, cache, first)
+    jax.block_until_ready(out_tokens)
+    t_decode = time.perf_counter() - t0
+    print(f"[serve] {cfg.name}: prefill({b}x{s})={t_prefill*1e3:.1f}ms, "
+          f"{args.decode_tokens} tokens decoded in {t_decode*1e3:.1f}ms "
+          f"({b*args.decode_tokens/t_decode:,.0f} tok/s)")
+    print(f"[serve] sample continuation: {out_tokens[0, :8].tolist()}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--decode-tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full-config", dest="reduced", action="store_false")
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if cfg.family == "lstm_ae":
+        serve_lstm_ae(cfg, args)
+    else:
+        serve_lm(cfg, args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Substrate layers: attention, MLP, MoE, norms, embeddings, RWKV6, Mamba."""

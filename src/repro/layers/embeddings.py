@@ -1,0 +1,82 @@
+"""Token embedding + unembedding with vocab sharding, and chunked
+cross-entropy (never materialises full (B, S, V) logits)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.utils import Params, truncated_normal_init
+
+
+def init_embedding(key: jax.Array, vocab: int, d_model: int) -> Params:
+    return {"table": truncated_normal_init(key, (vocab, d_model), fan_in=d_model)}
+
+
+def embedding_specs() -> Params:
+    return {"table": ("tp", "fsdp")}
+
+
+def embed_tokens(params: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    """tokens (B, S) int32 -> (B, S, D)."""
+    y = params["table"].astype(dtype)[tokens]
+    return constrain(y, ("batch", "sp", None))
+
+
+def init_unembed(key: jax.Array, d_model: int, vocab: int) -> Params:
+    return {"w": truncated_normal_init(key, (d_model, vocab), fan_in=d_model)}
+
+
+def unembed_specs() -> Params:
+    return {"w": ("fsdp", "tp")}
+
+
+def chunked_xent_loss(
+    unembed_w: jnp.ndarray,
+    h: jnp.ndarray,
+    labels: jnp.ndarray,
+    *,
+    chunk: int = 2048,
+    z_loss: float = 0.0,
+) -> jnp.ndarray:
+    """Mean next-token cross-entropy, scanning over sequence chunks.
+
+    h: (B, S, D) final hidden states; labels: (B, S) int32 (-1 = ignore).
+    Never materialises more than (B, chunk, V) logits, which is what keeps
+    the 163k/200k-vocab archs inside HBM at train_4k.
+    """
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = (s + pad) // chunk
+    hc = jnp.moveaxis(h.reshape(b, n_chunks, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n_chunks, chunk), 1, 0)
+
+    def step(carry, blk):
+        total, count = carry
+        hb, lb = blk
+        logits = hb @ unembed_w.astype(hb.dtype)              # (B, c, V)
+        logits = constrain(logits, ("batch", None, "tp"))
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1
+        )[..., 0]
+        nll = lse - gold
+        if z_loss:
+            nll = nll + z_loss * jnp.square(lse)
+        mask = (lb >= 0).astype(jnp.float32)
+        return (total + jnp.sum(nll * mask), count + jnp.sum(mask)), None
+
+    (total, count), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)), (hc, lc))
+    return total / jnp.maximum(count, 1.0)
+
+
+def unembed_logits(unembed_w: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Logits for decode (B, 1, D) -> (B, 1, V)."""
+    logits = h @ unembed_w.astype(h.dtype)
+    return constrain(logits, ("batch", None, "tp"))

@@ -1,0 +1,60 @@
+"""Feed-forward blocks: SwiGLU [arXiv:2002.05202], GELU, squared-ReLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.layers.linear import apply_linear, init_linear, linear_specs
+from repro.utils import Params, split_keys
+
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    if cfg.activation == "swiglu":
+        keys = split_keys(key, ["gate", "up", "down"])
+        return {
+            "gate": init_linear(keys["gate"], cfg.d_model, d_ff),
+            "up": init_linear(keys["up"], cfg.d_model, d_ff),
+            "down": init_linear(keys["down"], d_ff, cfg.d_model),
+        }
+    keys = split_keys(key, ["up", "down"])
+    return {
+        "up": init_linear(keys["up"], cfg.d_model, d_ff, bias=cfg.qkv_bias),
+        "down": init_linear(keys["down"], d_ff, cfg.d_model, bias=cfg.qkv_bias),
+    }
+
+
+def mlp_specs(cfg: ModelConfig) -> Params:
+    if cfg.activation == "swiglu":
+        return {
+            "gate": linear_specs("fsdp", "tp"),
+            "up": linear_specs("fsdp", "tp"),
+            "down": linear_specs("tp", "fsdp"),
+        }
+    return {
+        "up": linear_specs("fsdp", "tp", bias=cfg.qkv_bias),
+        "down": linear_specs("tp", "fsdp", bias=cfg.qkv_bias),
+    }
+
+
+def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu_sq":
+        return jnp.square(jax.nn.relu(x))
+    if kind == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def apply_mlp(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (..., D) -> (..., D); hidden activations sharded over tp."""
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(apply_linear(params["gate"], x)) * apply_linear(params["up"], x)
+    else:
+        h = _act(apply_linear(params["up"], x), cfg.activation)
+    h = constrain(h, ("batch",) + (None,) * (x.ndim - 2) + ("tp",))
+    y = apply_linear(params["down"], h)
+    return constrain(y, ("batch", "sp", None) if x.ndim == 3 else ("batch",) + (None,) * (x.ndim - 1))

@@ -1,0 +1,47 @@
+"""Normalisation layers: RMSNorm, LayerNorm, non-parametric LN (olmo)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import Params
+
+
+def init_norm(kind: str, dim: int) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), jnp.float32)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+    if kind == "nonparametric_ln":
+        return {}
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+def norm_specs(kind: str) -> Params:
+    """Logical-axis specs matching :func:`init_norm` (all replicated)."""
+    if kind == "rmsnorm":
+        return {"scale": (None,)}
+    if kind == "layernorm":
+        return {"scale": (None,), "bias": (None,)}
+    if kind == "nonparametric_ln":
+        return {}
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+def apply_norm(params: Params, x: jnp.ndarray, kind: str, eps: float = 1e-5) -> jnp.ndarray:
+    """Normalise over the trailing dim; statistics in fp32 for stability."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32)
+    elif kind in ("layernorm", "nonparametric_ln"):
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) / jnp.sqrt(var + eps)
+        if kind == "layernorm":
+            y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown norm kind {kind!r}")
+    return y.astype(dtype)

@@ -1,0 +1,36 @@
+"""Rotary position embeddings (RoPE) [arXiv:2104.09864]."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for each rotated pair: (head_dim // 2,)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate ``x`` (..., S, H, head_dim) by per-position angles.
+
+    ``positions`` broadcasts against the sequence dim: (S,) or (B, S).
+    Uses the half-split convention (rotate_half), matching llama-family
+    checkpoints.
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                   # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rotated.astype(x.dtype)
+
+
+def sinusoidal_embedding(seq_len: int, dim: int, max_timescale: float = 10000.0) -> jnp.ndarray:
+    """Fixed sinusoidal table (seq_len, dim) — whisper encoder positions."""
+    half = dim // 2
+    positions = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    timescales = max_timescale ** (jnp.arange(half, dtype=jnp.float32) / max(1, half - 1))
+    args = positions / timescales[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)

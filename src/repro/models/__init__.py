@@ -1,0 +1,3 @@
+from repro.models.api import ModelAPI, build_model, cache_struct, input_specs, param_struct
+
+__all__ = ["ModelAPI", "build_model", "cache_struct", "input_specs", "param_struct"]

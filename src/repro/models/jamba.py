@@ -1,0 +1,241 @@
+"""Jamba [arXiv:2403.19887]: hybrid Mamba + attention (1:7) with MoE (every
+2nd layer).  Layers are grouped into periods of 8 (attention at offset 4);
+params are stacked per period position and the stack is scanned over
+periods, keeping HLO compact (4 periods for the 32L config).
+
+Sub-quadratic: only the 4 attention layers carry a KV cache, so the
+long_500k decode shape runs for this architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.layers.attention import (
+    apply_attention,
+    attention_specs,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+    kv_cache_specs,
+)
+from repro.layers.embeddings import (
+    chunked_xent_loss,
+    embed_tokens,
+    embedding_specs,
+    init_embedding,
+    init_unembed,
+    unembed_logits,
+    unembed_specs,
+)
+from repro.layers.mamba import (
+    apply_mamba,
+    apply_mamba_step,
+    init_mamba,
+    init_mamba_state,
+    mamba_specs,
+    mamba_state_specs,
+)
+from repro.layers.mlp import apply_mlp, init_mlp, mlp_specs
+from repro.layers.moe import apply_moe, init_moe, moe_specs
+from repro.layers.norms import apply_norm, init_norm, norm_specs
+from repro.models.transformer import _stack_specs
+from repro.utils import Params, split_keys
+
+PERIOD = 8
+
+
+def _n_periods(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % PERIOD == 0, "jamba layer count must be a multiple of 8"
+    return cfg.num_layers // PERIOD
+
+
+def _layer_kind(cfg: ModelConfig, j: int) -> tuple[str, str]:
+    """(mixer, ffn) for period position j — static per position."""
+    mixer = "attn" if j % cfg.attn_every == cfg.attn_offset else "mamba"
+    ffn = "moe" if cfg.is_moe_layer(j) else "mlp"
+    return mixer, ffn
+
+
+def init_position(key: jax.Array, cfg: ModelConfig, j: int) -> Params:
+    mixer, ffn = _layer_kind(cfg, j)
+    keys = split_keys(key, ["mixer", "ffn"])
+    p = {"ln1": init_norm(cfg.norm, cfg.d_model), "ln2": init_norm(cfg.norm, cfg.d_model)}
+    p["mixer"] = (
+        init_attention(keys["mixer"], cfg) if mixer == "attn" else init_mamba(keys["mixer"], cfg)
+    )
+    p["ffn"] = init_moe(keys["ffn"], cfg) if ffn == "moe" else init_mlp(keys["ffn"], cfg)
+    return p
+
+
+def position_specs(cfg: ModelConfig, j: int) -> Params:
+    mixer, ffn = _layer_kind(cfg, j)
+    return {
+        "ln1": norm_specs(cfg.norm),
+        "ln2": norm_specs(cfg.norm),
+        "mixer": attention_specs(cfg) if mixer == "attn" else mamba_specs(cfg),
+        "ffn": moe_specs(cfg) if ffn == "moe" else mlp_specs(cfg),
+    }
+
+
+def init_jamba(key: jax.Array, cfg: ModelConfig) -> Params:
+    n_p = _n_periods(cfg)
+    keys = split_keys(key, ["embed", "layers", "unembed"])
+    period_keys = jax.random.split(keys["layers"], n_p * PERIOD).reshape(n_p, PERIOD, 2)
+    positions = []
+    for j in range(PERIOD):
+        stacked = jax.vmap(lambda k, j=j: init_position(k, cfg, j))(period_keys[:, j])
+        positions.append(stacked)
+    return {
+        "embed": init_embedding(keys["embed"], cfg.vocab_size, cfg.d_model),
+        "positions": tuple(positions),
+        "ln_f": init_norm(cfg.norm, cfg.d_model),
+        "unembed": init_unembed(keys["unembed"], cfg.d_model, cfg.vocab_size),
+    }
+
+
+def jamba_specs(cfg: ModelConfig) -> Params:
+    return {
+        "embed": embedding_specs(),
+        "positions": tuple(_stack_specs(position_specs(cfg, j)) for j in range(PERIOD)),
+        "ln_f": norm_specs(cfg.norm),
+        "unembed": unembed_specs(),
+    }
+
+
+def _ffn(lp: Params, h: jnp.ndarray, cfg: ModelConfig, j: int):
+    _, ffn = _layer_kind(cfg, j)
+    if ffn == "moe":
+        if cfg.moe.impl == "ep_a2a":
+            from repro.layers.moe import apply_moe_ep
+            return apply_moe_ep(lp["ffn"], h, cfg)
+        return apply_moe(lp["ffn"], h, cfg)
+    return apply_mlp(lp["ffn"], h, cfg), jnp.float32(0.0)
+
+
+def init_states(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    """Decode state tree: tuple over period positions, stacked over periods.
+    Attention positions hold a KV cache; mamba positions hold (ssm, conv)."""
+    n_p = _n_periods(cfg)
+    states = []
+    for j in range(PERIOD):
+        mixer, _ = _layer_kind(cfg, j)
+        one = (
+            init_kv_cache(cfg, batch, max_len, dtype)
+            if mixer == "attn"
+            else init_mamba_state(cfg, batch, dtype)
+        )
+        states.append(jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_p,) + x.shape), one))
+    return tuple(states)
+
+
+def state_specs(cfg: ModelConfig) -> Params:
+    from repro.distributed.sharding import map_specs
+
+    out = []
+    for j in range(PERIOD):
+        mixer, _ = _layer_kind(cfg, j)
+        base = kv_cache_specs() if mixer == "attn" else mamba_state_specs()
+        out.append(map_specs(lambda axes: (None,) + axes, base))
+    return tuple(out)
+
+
+def forward(
+    params: Params,
+    h: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    remat: bool = True,
+    kv_chunk: int = 1024,
+    q_chunks: int = 1,
+    collect_state: bool = False,
+):
+    """h: (B, S, D) -> (h, aux, states|None).  Jamba has no positional
+    embedding — the SSM layers carry position information."""
+
+    def period_fn(carry, lp_all):
+        h, aux = carry
+        new_sts = []
+        for j in range(PERIOD):
+            lp = lp_all[j]
+            mixer, _ = _layer_kind(cfg, j)
+            hn = apply_norm(lp["ln1"], h, cfg.norm)
+            if mixer == "attn":
+                y, kv = apply_attention(
+                    lp["mixer"], hn, cfg=cfg, causal=True, use_rope=False,
+                    kv_chunk=kv_chunk, q_chunks=q_chunks, return_kv=True,
+                )
+                new_st = {"k": kv[0].astype(h.dtype), "v": kv[1].astype(h.dtype)}
+            else:
+                y, new_st = apply_mamba(lp["mixer"], hn, cfg)
+            h = constrain(h + y, ("batch", "sp", None))
+            hn = apply_norm(lp["ln2"], h, cfg.norm)
+            f, aux_l = _ffn(lp, hn, cfg, j)
+            h = constrain(h + f, ("batch", "sp", None))
+            aux = aux + aux_l
+            new_sts.append(new_st)
+        return (h, aux), (tuple(new_sts) if collect_state else None)
+
+    body = jax.checkpoint(period_fn) if remat else period_fn
+    (h, aux), collected = jax.lax.scan(body, (h, jnp.float32(0.0)), params["positions"])
+    return h, aux, (collected if collect_state else None)
+
+
+def train_loss(params: Params, batch: dict, cfg: ModelConfig, *, remat: bool = True,
+               loss_chunk: int = 2048, kv_chunk: int = 1024, q_chunks: int = 1,
+               aux_weight: float = 0.01, **_) -> tuple[jnp.ndarray, dict]:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], batch["tokens"], dtype)
+    h, aux, _ = forward(params, h, cfg, remat=remat, kv_chunk=kv_chunk, q_chunks=q_chunks)
+    h = apply_norm(params["ln_f"], h, cfg.norm)
+    loss = chunked_xent_loss(params["unembed"]["w"], h, batch["labels"], chunk=loss_chunk)
+    total = loss + aux_weight * aux
+    return total, {"xent": loss, "aux": aux}
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig, *, kv_chunk: int = 1024,
+            q_chunks: int = 1, **_) -> tuple[jnp.ndarray, Params]:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], batch["tokens"], dtype)
+    h, _, states = forward(
+        params, h, cfg, remat=False, kv_chunk=kv_chunk, q_chunks=q_chunks,
+        collect_state=True,
+    )
+    h = apply_norm(params["ln_f"], h, cfg.norm)
+    logits = unembed_logits(params["unembed"]["w"], h[:, -1:, :])
+    return logits, states
+
+
+def decode_step(params: Params, token: jnp.ndarray, states: Params,
+                cache_len: jnp.ndarray, cfg: ModelConfig) -> tuple[jnp.ndarray, Params]:
+    """One-token decode.  token: (B,1); states from :func:`init_states`."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], token, dtype)[:, 0, :]  # (B, D)
+
+    def period_fn(h, inp):
+        lp_all, st_all = inp
+        new_sts = []
+        for j in range(PERIOD):
+            lp, st = lp_all[j], st_all[j]
+            mixer, _ = _layer_kind(cfg, j)
+            hn = apply_norm(lp["ln1"], h, cfg.norm)
+            if mixer == "attn":
+                y3, new_st = decode_attention(
+                    lp["mixer"], hn[:, None, :], st, cache_len, cfg=cfg, use_rope=False
+                )
+                y = y3[:, 0, :]
+            else:
+                y, new_st = apply_mamba_step(lp["mixer"], hn, cfg, st)
+            h = h + y
+            hn = apply_norm(lp["ln2"], h, cfg.norm)
+            f, _ = _ffn(lp, hn[:, None, :], cfg, j)
+            h = h + f[:, 0, :]
+            new_sts.append(new_st)
+        return h, tuple(new_sts)
+
+    h, new_states = jax.lax.scan(period_fn, h, (params["positions"], states))
+    h = apply_norm(params["ln_f"], h, cfg.norm)
+    logits = unembed_logits(params["unembed"]["w"], h[:, None, :])
+    return logits, new_states

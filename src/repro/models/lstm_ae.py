@@ -1,0 +1,60 @@
+"""Model-API wrapper for the paper's LSTM-AE family.
+
+Training uses the layer-by-layer schedule (gradient math is schedule-
+independent); serving uses the temporal-parallel wavefront — the paper's
+accelerator execution.  Streaming decode carries per-layer (h, c) state,
+one timestep through all layers per call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import ModelConfig
+from repro.core.lstm import (
+    init_lstm_ae,
+    lstm_ae_specs,
+    lstm_cell,
+    lstm_ae_sequential,
+)
+from repro.core.temporal import wavefront_forward
+from repro.utils import Params
+
+
+def train_loss(params: Params, batch: dict, cfg: ModelConfig, **_) -> tuple[jnp.ndarray, dict]:
+    """batch: series (B, T, F) -> mean reconstruction MSE."""
+    xs = jnp.swapaxes(batch["series"], 0, 1)  # (T, B, F)
+    recon = lstm_ae_sequential(params, xs)
+    err = jnp.mean(jnp.square(recon.astype(jnp.float32) - xs.astype(jnp.float32)))
+    return err, {"mse": err}
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig, **_) -> tuple[jnp.ndarray, Params]:
+    """Serve a batch of sequences on the wavefront engine; returns
+    per-sequence reconstruction errors (the anomaly scores)."""
+    xs = jnp.swapaxes(batch["series"], 0, 1)
+    recon = wavefront_forward(params, xs)
+    err = jnp.mean(jnp.square(recon.astype(jnp.float32) - xs.astype(jnp.float32)), axis=(0, 2))
+    return err, {}
+
+
+def init_stream_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    sizes = cfg.lstm_ae.layer_sizes()
+    return {
+        "h": tuple(jnp.zeros((batch, s), dtype) for s in sizes),
+        "c": tuple(jnp.zeros((batch, s), jnp.float32) for s in sizes),
+    }
+
+
+def decode_step(params: Params, x_t: jnp.ndarray, state: Params,
+                cache_len: jnp.ndarray, cfg: ModelConfig) -> tuple[jnp.ndarray, Params]:
+    """One streaming timestep x_t (B, F) through all layers."""
+    del cache_len
+    hs, cs = [], []
+    cur = x_t
+    for layer, h, c in zip(params["layers"], state["h"], state["c"]):
+        h_new, c_new = lstm_cell(layer, cur, h, c)
+        hs.append(h_new)
+        cs.append(c_new)
+        cur = h_new
+    return cur, {"h": tuple(hs), "c": tuple(cs)}

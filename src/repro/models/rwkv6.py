@@ -1,0 +1,183 @@
+"""RWKV-6 "Finch" language model [arXiv:2404.05892].
+
+Attention-free: per-token recurrence — the assigned architecture closest to
+the paper's own setting (the temporal-parallel pipeline applies directly,
+see DESIGN.md §4).  Supports train (chunked WKV scan), prefill (same scan,
+emitting final states), and decode (single recurrence step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.layers.embeddings import (
+    chunked_xent_loss,
+    embed_tokens,
+    embedding_specs,
+    init_embedding,
+    init_unembed,
+    unembed_logits,
+    unembed_specs,
+)
+from repro.layers.norms import apply_norm, init_norm, norm_specs
+from repro.layers.rwkv import (
+    apply_channel_mix,
+    apply_time_mix,
+    apply_time_mix_step,
+    channel_mix_specs,
+    init_channel_mix,
+    init_time_mix,
+    time_mix_specs,
+)
+from repro.models.transformer import _stack_specs
+from repro.utils import Params, split_keys
+
+
+def init_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    keys = split_keys(key, ["tm", "cm"])
+    return {
+        "ln1": init_norm("layernorm", cfg.d_model),
+        "tm": init_time_mix(keys["tm"], cfg),
+        "ln2": init_norm("layernorm", cfg.d_model),
+        "cm": init_channel_mix(keys["cm"], cfg),
+    }
+
+
+def layer_specs(cfg: ModelConfig) -> Params:
+    return {
+        "ln1": norm_specs("layernorm"),
+        "tm": time_mix_specs(cfg),
+        "ln2": norm_specs("layernorm"),
+        "cm": channel_mix_specs(cfg),
+    }
+
+
+def init_rwkv6(key: jax.Array, cfg: ModelConfig) -> Params:
+    keys = split_keys(key, ["embed", "layers", "unembed"])
+    layer_keys = jax.random.split(keys["layers"], cfg.num_layers)
+    return {
+        "embed": init_embedding(keys["embed"], cfg.vocab_size, cfg.d_model),
+        "ln0": init_norm("layernorm", cfg.d_model),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "ln_f": init_norm("layernorm", cfg.d_model),
+        "unembed": init_unembed(keys["unembed"], cfg.d_model, cfg.vocab_size),
+    }
+
+
+def rwkv6_specs(cfg: ModelConfig) -> Params:
+    return {
+        "embed": embedding_specs(),
+        "ln0": norm_specs("layernorm"),
+        "layers": _stack_specs(layer_specs(cfg)),
+        "ln_f": norm_specs("layernorm"),
+        "unembed": unembed_specs(),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Params:
+    h, hd = cfg.d_model // cfg.rwkv.head_dim, cfg.rwkv.head_dim
+    one = {
+        "tm_x": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "cm_x": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one
+    )
+
+
+def state_specs() -> Params:
+    return {
+        "tm_x": (None, "batch", None),
+        "wkv": (None, "batch", "tp", None, None),
+        "cm_x": (None, "batch", None),
+    }
+
+
+def forward(
+    params: Params,
+    h: jnp.ndarray,
+    cfg: ModelConfig,
+    state: Params | None = None,
+    *,
+    remat: bool = True,
+    chunk: int = 64,
+):
+    """h: (B, S, D) embedded inputs -> (h, new_state)."""
+    b = h.shape[0]
+    if state is None:
+        state = init_state(cfg, b, h.dtype)
+
+    def layer_fn(h, inp):
+        lp, st = inp
+        y, (tm_x, wkv) = apply_time_mix(
+            lp["tm"], apply_norm(lp["ln1"], h, "layernorm"), cfg,
+            x_prev=st["tm_x"].astype(h.dtype), state=st["wkv"], chunk=chunk,
+        )
+        h = h + y
+        y, cm_x = apply_channel_mix(
+            lp["cm"], apply_norm(lp["ln2"], h, "layernorm"), cfg,
+            x_prev=st["cm_x"].astype(h.dtype),
+        )
+        h = h + y
+        sp = "sp" if h.shape[1] > 1 else None
+        h = constrain(h, ("batch", sp, None))
+        new_st = {"tm_x": tm_x.astype(st["tm_x"].dtype), "wkv": wkv, "cm_x": cm_x.astype(st["cm_x"].dtype)}
+        return h, new_st
+
+    body = jax.checkpoint(layer_fn) if remat else layer_fn
+    h, new_state = jax.lax.scan(body, h, (params["layers"], state))
+    return h, new_state
+
+
+def train_loss(params: Params, batch: dict, cfg: ModelConfig, *,
+               remat: bool = True, loss_chunk: int = 2048, **_) -> tuple[jnp.ndarray, dict]:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], batch["tokens"], dtype)
+    h = apply_norm(params["ln0"], h, "layernorm")
+    h, _ = forward(params, h, cfg, remat=remat)
+    h = apply_norm(params["ln_f"], h, "layernorm")
+    loss = chunked_xent_loss(params["unembed"]["w"], h, batch["labels"], chunk=loss_chunk)
+    return loss, {"xent": loss}
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig, **_) -> tuple[jnp.ndarray, Params]:
+    """Prefill = run the recurrence over the prompt, return final states."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], batch["tokens"], dtype)
+    h = apply_norm(params["ln0"], h, "layernorm")
+    h, state = forward(params, h, cfg, remat=False)
+    h = apply_norm(params["ln_f"], h, "layernorm")
+    logits = unembed_logits(params["unembed"]["w"], h[:, -1:, :])
+    return logits, state
+
+
+def decode_step(params: Params, token: jnp.ndarray, state: Params,
+                cache_len: jnp.ndarray, cfg: ModelConfig) -> tuple[jnp.ndarray, Params]:
+    """One-token decode.  token: (B,1).  State: stacked (L, ...) tree."""
+    del cache_len  # recurrent state is position-free
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], token, dtype)[:, 0, :]  # (B, D)
+    h = apply_norm(params["ln0"], h, "layernorm")
+
+    def layer_fn(h, inp):
+        lp, st = inp
+        y, (tm_x, wkv) = apply_time_mix_step(
+            lp["tm"], apply_norm(lp["ln1"], h, "layernorm"), cfg,
+            st["tm_x"].astype(h.dtype), st["wkv"],
+        )
+        h = h + y
+        y3, cm_x = apply_channel_mix(
+            lp["cm"], apply_norm(lp["ln2"], h, "layernorm")[:, None, :], cfg,
+            x_prev=st["cm_x"].astype(h.dtype),
+        )
+        h = h + y3[:, 0, :]
+        new_st = {"tm_x": tm_x.astype(st["tm_x"].dtype), "wkv": wkv, "cm_x": cm_x.astype(st["cm_x"].dtype)}
+        return h, new_st
+
+    h, new_state = jax.lax.scan(layer_fn, h, (params["layers"], state))
+    h = apply_norm(params["ln_f"], h, "layernorm")
+    logits = unembed_logits(params["unembed"]["w"], h[:, None, :])
+    return logits, new_state

@@ -1,0 +1,282 @@
+"""Decoder-only transformer LM: dense or MoE, GQA + RoPE, pre-norm.
+
+Covers moonshot / dbrx / olmo / phi4-mini / tinyllama / internlm2 /
+phi-3-vision (backbone).  Layers are homogeneous and stacked, executed with
+``lax.scan`` + per-layer remat so the HLO stays compact for the 512-device
+dry-run compiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.layers.attention import (
+    apply_attention,
+    attention_specs,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+    kv_cache_specs,
+)
+from repro.layers.embeddings import (
+    chunked_xent_loss,
+    embed_tokens,
+    embedding_specs,
+    init_embedding,
+    init_unembed,
+    unembed_logits,
+    unembed_specs,
+)
+from repro.layers.mlp import apply_mlp, init_mlp, mlp_specs
+from repro.layers.moe import apply_moe, init_moe, moe_specs
+from repro.layers.norms import apply_norm, init_norm, norm_specs
+from repro.utils import Params, split_keys
+
+
+def _is_moe(cfg: ModelConfig) -> bool:
+    return cfg.moe is not None
+
+
+def init_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    keys = split_keys(key, ["attn", "ffn"])
+    p = {
+        "ln1": init_norm(cfg.norm, cfg.d_model),
+        "attn": init_attention(keys["attn"], cfg),
+        "ln2": init_norm(cfg.norm, cfg.d_model),
+    }
+    if _is_moe(cfg):
+        p["moe"] = init_moe(keys["ffn"], cfg)
+    else:
+        p["mlp"] = init_mlp(keys["ffn"], cfg)
+    return p
+
+
+def layer_specs(cfg: ModelConfig) -> Params:
+    s = {
+        "ln1": norm_specs(cfg.norm),
+        "attn": attention_specs(cfg),
+        "ln2": norm_specs(cfg.norm),
+    }
+    if _is_moe(cfg):
+        s["moe"] = moe_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(cfg)
+    return s
+
+
+def _stack_specs(specs: Params) -> Params:
+    """Prepend the stacked-layer dim (replicated) to every leaf spec."""
+    from repro.distributed.sharding import map_specs
+
+    return map_specs(lambda axes: (None,) + axes, specs)
+
+
+def init_transformer(key: jax.Array, cfg: ModelConfig) -> Params:
+    keys = split_keys(key, ["embed", "layers", "unembed"])
+    layer_keys = jax.random.split(keys["layers"], cfg.num_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    p = {
+        "embed": init_embedding(keys["embed"], cfg.vocab_size, cfg.d_model),
+        "layers": layers,
+        "ln_f": init_norm(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_unembed(keys["unembed"], cfg.d_model, cfg.vocab_size)
+    return p
+
+
+def transformer_specs(cfg: ModelConfig) -> Params:
+    s = {
+        "embed": embedding_specs(),
+        "layers": _stack_specs(layer_specs(cfg)),
+        "ln_f": norm_specs(cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        s["unembed"] = unembed_specs()
+    return s
+
+
+def _unembed_w(params: Params, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["unembed"]["w"]
+
+
+def _ffn(lp: Params, h: jnp.ndarray, cfg: ModelConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    if _is_moe(cfg):
+        if cfg.moe.impl == "ep_a2a":
+            from repro.layers.moe import apply_moe_ep
+            return apply_moe_ep(lp["moe"], h, cfg)
+        return apply_moe(lp["moe"], h, cfg)
+    return apply_mlp(lp["mlp"], h, cfg), jnp.float32(0.0)
+
+
+def forward(
+    params: Params,
+    h: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    remat: bool = True,
+    kv_chunk: int = 1024,
+    q_chunks: int = 1,
+    collect_cache: bool = False,
+):
+    """Run the layer stack on embedded inputs h (B, S, D).
+
+    Returns (h, aux_loss) or, with ``collect_cache``, (h, aux, {"k","v"}
+    stacked (L, B, S, Hkv, hd)) for prefill.
+    """
+    if positions is None:
+        positions = jnp.arange(h.shape[1])
+
+    def layer_fn(carry, lp):
+        h, aux = carry
+        if cfg.bwd_constrain:
+            # entry constraint: its transpose pins the incoming COTANGENT to
+            # the same (batch, sp) sharding, stopping XLA from materialising
+            # replicated full-sequence gradients in the layer backward (§Perf)
+            h = constrain(h, ("batch", "sp", None))
+        hn = apply_norm(lp["ln1"], h, cfg.norm)
+        attn_out, kv = apply_attention(
+            lp["attn"], hn, cfg=cfg, causal=causal, positions=positions,
+            kv_chunk=kv_chunk, q_chunks=q_chunks, return_kv=True,
+        )
+        h = constrain(h + attn_out, ("batch", "sp", None))
+        hn = apply_norm(lp["ln2"], h, cfg.norm)
+        f, aux_l = _ffn(lp, hn, cfg)
+        h = constrain(h + f, ("batch", "sp", None))
+        return (h, aux + aux_l), (kv if collect_cache else None)
+
+    body = jax.checkpoint(layer_fn) if remat else layer_fn
+    (h, aux), caches = jax.lax.scan(body, (h, jnp.float32(0.0)), params["layers"])
+    h = apply_norm(params["ln_f"], h, cfg.norm)
+    if collect_cache:
+        return h, aux, {"k": caches[0], "v": caches[1]}
+    return h, aux
+
+
+def embed_inputs(params: Params, batch: dict, cfg: ModelConfig, dtype) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Token (+ optional modality-stub) embedding.  Returns (h, labels_mask_offset)."""
+    h = embed_tokens(params["embed"], batch["tokens"], dtype)
+    if cfg.frontend == "vision_stub" and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(dtype)  # (B, P, D) precomputed patches
+        h = jnp.concatenate([img, h], axis=1)
+        h = constrain(h, ("batch", "sp", None))
+    return h
+
+
+def train_loss(
+    params: Params,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    remat: bool = True,
+    loss_chunk: int = 2048,
+    kv_chunk: int = 1024,
+    q_chunks: int = 1,
+    aux_weight: float = 0.01,
+) -> tuple[jnp.ndarray, dict]:
+    """Next-token LM loss.  batch: tokens (B,S), labels (B,S) [-1 = pad],
+    optionally image_embeds (B,P,D) (labels already sized to S + P?  No —
+    labels cover the FULL residual stream; vision positions are -1)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_inputs(params, batch, cfg, dtype)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_stub" and "image_embeds" in batch:
+        pad = -jnp.ones((labels.shape[0], batch["image_embeds"].shape[1]), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    h, aux = forward(
+        params, h, cfg, remat=remat, kv_chunk=kv_chunk, q_chunks=q_chunks
+    )
+    loss = chunked_xent_loss(_unembed_w(params, cfg), h, labels, chunk=loss_chunk)
+    total = loss + aux_weight * aux
+    return total, {"xent": loss, "aux": aux}
+
+
+def prefill(
+    params: Params,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    kv_chunk: int = 1024,
+    q_chunks: int = 1,
+) -> tuple[jnp.ndarray, Params]:
+    """Prefill: full forward, emit the KV cache + last-position logits."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_inputs(params, batch, cfg, dtype)
+    h, _, cache = forward(
+        params, h, cfg, remat=False, kv_chunk=kv_chunk, q_chunks=q_chunks,
+        collect_cache=True,
+    )
+    logits = unembed_logits(_unembed_w(params, cfg), h[:, -1:, :])
+    return logits, cache
+
+
+def decode_step(
+    params: Params,
+    token: jnp.ndarray,
+    cache: Params,
+    cache_len: jnp.ndarray,
+    cfg: ModelConfig,
+) -> tuple[jnp.ndarray, Params]:
+    """One-token decode.  token: (B, 1) int32; cache: {"k","v"} stacked
+    (L, B, S_max, Hkv, hd); cache_len: scalar int32 (tokens already cached).
+    """
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], token, dtype)
+    h = constrain(h, ("batch", None, None))
+
+    def layer_fn(h, inp):
+        lp, cache_l = inp
+        hn = apply_norm(lp["ln1"], h, cfg.norm)
+        attn_out, new_cache_l = decode_attention(
+            lp["attn"], hn, cache_l, cache_len, cfg=cfg
+        )
+        h = h + attn_out
+        hn = apply_norm(lp["ln2"], h, cfg.norm)
+        f, _ = _ffn(lp, hn, cfg)
+        h = h + f
+        return h, new_cache_l
+
+    if cfg.decode_loop == "unroll":
+        # tuple-of-layers cache: each layer's buffers are independent jit
+        # inputs/outputs, so donation aliases every DUS in place — no full
+        # stacked-cache intermediary ever exists (§Perf cell 3 iteration 3)
+        new_layers = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            h, nc = layer_fn(h, (lp, cache[i]))
+            new_layers.append(nc)
+        new_cache = tuple(new_layers)
+    else:
+        h, new_cache = jax.lax.scan(layer_fn, h, (params["layers"], cache))
+    h = apply_norm(params["ln_f"], h, cfg.norm)
+    logits = unembed_logits(_unembed_w(params, cfg), h)
+    return logits, new_cache
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    if cfg.decode_loop == "unroll":
+        # independent per-layer buffers (see decode_step)
+        return tuple(
+            init_kv_cache(cfg, batch, max_len, dtype) for _ in range(cfg.num_layers)
+        )
+    one = init_kv_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one
+    )
+
+
+def decode_cache_specs(cfg: ModelConfig) -> Params:
+    from repro.distributed.sharding import map_specs
+
+    if cfg.decode_loop == "unroll":
+        return tuple(kv_cache_specs() for _ in range(cfg.num_layers))
+    return map_specs(lambda axes: (None,) + axes, kv_cache_specs())

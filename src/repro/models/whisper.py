@@ -1,0 +1,262 @@
+"""Whisper [arXiv:2212.04356] encoder-decoder backbone.
+
+The mel-spectrogram/conv frontend is a STUB per the assignment:
+``input_specs()`` feeds precomputed frame embeddings (B, T_enc, D).
+Encoder: bidirectional attention + sinusoidal positions.  Decoder: causal
+self-attention + cross-attention + learned positions.  Decode shapes lower
+the decoder (self-KV cache + precomputed cross-KV).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.layers.attention import (
+    apply_attention,
+    attention_specs,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+    kv_cache_specs,
+)
+from repro.layers.embeddings import (
+    chunked_xent_loss,
+    embed_tokens,
+    embedding_specs,
+    init_embedding,
+    unembed_logits,
+)
+from repro.layers.linear import apply_linear
+from repro.layers.mlp import apply_mlp, init_mlp, mlp_specs
+from repro.layers.norms import apply_norm, init_norm, norm_specs
+from repro.layers.rotary import sinusoidal_embedding
+from repro.models.transformer import _stack_specs
+from repro.utils import Params, split_keys, truncated_normal_init
+
+MAX_DECODER_LEN = 32_768  # sized for the assigned decode_32k shape
+
+
+def init_enc_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    keys = split_keys(key, ["attn", "mlp"])
+    return {
+        "ln1": init_norm("layernorm", cfg.d_model),
+        "attn": init_attention(keys["attn"], cfg),
+        "ln2": init_norm("layernorm", cfg.d_model),
+        "mlp": init_mlp(keys["mlp"], cfg),
+    }
+
+
+def enc_layer_specs(cfg: ModelConfig) -> Params:
+    return {
+        "ln1": norm_specs("layernorm"),
+        "attn": attention_specs(cfg),
+        "ln2": norm_specs("layernorm"),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def init_dec_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    keys = split_keys(key, ["self", "cross", "mlp"])
+    return {
+        "ln1": init_norm("layernorm", cfg.d_model),
+        "self_attn": init_attention(keys["self"], cfg),
+        "ln_x": init_norm("layernorm", cfg.d_model),
+        "cross_attn": init_attention(keys["cross"], cfg),
+        "ln2": init_norm("layernorm", cfg.d_model),
+        "mlp": init_mlp(keys["mlp"], cfg),
+    }
+
+
+def dec_layer_specs(cfg: ModelConfig) -> Params:
+    return {
+        "ln1": norm_specs("layernorm"),
+        "self_attn": attention_specs(cfg),
+        "ln_x": norm_specs("layernorm"),
+        "cross_attn": attention_specs(cfg),
+        "ln2": norm_specs("layernorm"),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def init_whisper(key: jax.Array, cfg: ModelConfig) -> Params:
+    keys = split_keys(key, ["embed", "pos", "enc", "dec"])
+    enc_keys = jax.random.split(keys["enc"], cfg.encoder_layers)
+    dec_keys = jax.random.split(keys["dec"], cfg.num_layers)
+    return {
+        "embed": init_embedding(keys["embed"], cfg.vocab_size, cfg.d_model),
+        "dec_pos": truncated_normal_init(keys["pos"], (MAX_DECODER_LEN, cfg.d_model), fan_in=cfg.d_model),
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "ln_enc": init_norm("layernorm", cfg.d_model),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "ln_dec": init_norm("layernorm", cfg.d_model),
+    }
+
+
+def whisper_specs(cfg: ModelConfig) -> Params:
+    return {
+        "embed": embedding_specs(),
+        "dec_pos": (None, "fsdp"),
+        "enc_layers": _stack_specs(enc_layer_specs(cfg)),
+        "ln_enc": norm_specs("layernorm"),
+        "dec_layers": _stack_specs(dec_layer_specs(cfg)),
+        "ln_dec": norm_specs("layernorm"),
+    }
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ModelConfig, *, remat: bool = True) -> jnp.ndarray:
+    """frames: (B, T_enc, D) stub frame embeddings -> encoder memory."""
+    h = frames + sinusoidal_embedding(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    h = constrain(h, ("batch", "sp", None))
+
+    def layer_fn(h, lp):
+        hn = apply_norm(lp["ln1"], h, "layernorm")
+        y = apply_attention(lp["attn"], hn, cfg=cfg, causal=False, use_rope=False)
+        h = constrain(h + y, ("batch", "sp", None))
+        hn = apply_norm(lp["ln2"], h, "layernorm")
+        h = constrain(h + apply_mlp(lp["mlp"], hn, cfg), ("batch", "sp", None))
+        return h, None
+
+    body = jax.checkpoint(layer_fn) if remat else layer_fn
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return apply_norm(params["ln_enc"], h, "layernorm")
+
+
+def decode_train(
+    params: Params, tokens: jnp.ndarray, memory: jnp.ndarray, cfg: ModelConfig,
+    *, remat: bool = True, kv_chunk: int = 1024, q_chunks: int = 1,
+) -> jnp.ndarray:
+    """Teacher-forced decoder pass -> final hidden states (B, S, D)."""
+    dtype = memory.dtype
+    h = embed_tokens(params["embed"], tokens, dtype)
+    h = h + params["dec_pos"][: tokens.shape[1]].astype(dtype)[None]
+    h = constrain(h, ("batch", "sp", None))
+
+    def layer_fn(h, lp):
+        hn = apply_norm(lp["ln1"], h, "layernorm")
+        y = apply_attention(
+            lp["self_attn"], hn, cfg=cfg, causal=True, use_rope=False,
+            kv_chunk=kv_chunk, q_chunks=q_chunks,
+        )
+        h = constrain(h + y, ("batch", "sp", None))
+        hn = apply_norm(lp["ln_x"], h, "layernorm")
+        y = apply_attention(lp["cross_attn"], hn, cfg=cfg, causal=False, use_rope=False, x_kv=memory)
+        h = constrain(h + y, ("batch", "sp", None))
+        hn = apply_norm(lp["ln2"], h, "layernorm")
+        h = constrain(h + apply_mlp(lp["mlp"], hn, cfg), ("batch", "sp", None))
+        return h, None
+
+    body = jax.checkpoint(layer_fn) if remat else layer_fn
+    h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    return apply_norm(params["ln_dec"], h, "layernorm")
+
+
+def train_loss(params: Params, batch: dict, cfg: ModelConfig, *, remat: bool = True,
+               loss_chunk: int = 2048, kv_chunk: int = 1024, q_chunks: int = 1,
+               **_) -> tuple[jnp.ndarray, dict]:
+    """batch: frames (B,T_enc,D), tokens (B,S), labels (B,S)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    memory = encode(params, batch["frames"].astype(dtype), cfg, remat=remat)
+    h = decode_train(params, batch["tokens"], memory, cfg, remat=remat,
+                     kv_chunk=kv_chunk, q_chunks=q_chunks)
+    loss = chunked_xent_loss(params["embed"]["table"].T, h, batch["labels"], chunk=loss_chunk)
+    return loss, {"xent": loss}
+
+
+# --- serving -----------------------------------------------------------
+
+def _cross_kv(lp: Params, memory: jnp.ndarray, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder memory (per layer)."""
+    hd = cfg.resolved_head_dim()
+    b, t, _ = memory.shape
+    k = apply_linear(lp["cross_attn"]["k"], memory).reshape(b, t, cfg.num_kv_heads, hd)
+    v = apply_linear(lp["cross_attn"]["v"], memory).reshape(b, t, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig, *, kv_chunk: int = 1024,
+            q_chunks: int = 1, **_) -> tuple[jnp.ndarray, Params]:
+    """Encode audio + teacher-forced prompt pass; emit self-KV and cross-KV."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    memory = encode(params, batch["frames"].astype(dtype), cfg, remat=False)
+    tokens = batch["tokens"]
+    h = embed_tokens(params["embed"], tokens, dtype)
+    h = h + params["dec_pos"][: tokens.shape[1]].astype(dtype)[None]
+
+    def layer_fn(h, lp):
+        hn = apply_norm(lp["ln1"], h, "layernorm")
+        y, kv = apply_attention(
+            lp["self_attn"], hn, cfg=cfg, causal=True, use_rope=False,
+            kv_chunk=kv_chunk, q_chunks=q_chunks, return_kv=True,
+        )
+        h = constrain(h + y, ("batch", "sp", None))
+        hn = apply_norm(lp["ln_x"], h, "layernorm")
+        y = apply_attention(lp["cross_attn"], hn, cfg=cfg, causal=False, use_rope=False, x_kv=memory)
+        h = constrain(h + y, ("batch", "sp", None))
+        hn = apply_norm(lp["ln2"], h, "layernorm")
+        h = constrain(h + apply_mlp(lp["mlp"], hn, cfg), ("batch", "sp", None))
+        ck, cv = _cross_kv(lp, memory, cfg)
+        return h, {"k": kv[0].astype(dtype), "v": kv[1].astype(dtype),
+                   "ck": ck.astype(dtype), "cv": cv.astype(dtype)}
+
+    h, cache = jax.lax.scan(layer_fn, h, params["dec_layers"])
+    h = apply_norm(params["ln_dec"], h, "layernorm")
+    logits = unembed_logits(params["embed"]["table"].T, h[:, -1:, :])
+    return logits, cache
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    hd = cfg.resolved_head_dim()
+    self_kv = init_kv_cache(cfg, batch, max_len, dtype)
+    one = {
+        "k": self_kv["k"],
+        "v": self_kv["v"],
+        "ck": jnp.zeros((batch, cfg.encoder_seq_len, cfg.num_kv_heads, hd), dtype),
+        "cv": jnp.zeros((batch, cfg.encoder_seq_len, cfg.num_kv_heads, hd), dtype),
+    }
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one)
+
+
+def decode_cache_specs(cfg: ModelConfig) -> Params:
+    base = kv_cache_specs()
+    return {
+        "k": (None,) + base["k"],
+        "v": (None,) + base["v"],
+        "ck": (None, "batch", "tp", None, None),
+        "cv": (None, "batch", "tp", None, None),
+    }
+
+
+def decode_step(params: Params, token: jnp.ndarray, cache: Params,
+                cache_len: jnp.ndarray, cfg: ModelConfig) -> tuple[jnp.ndarray, Params]:
+    """One decoder token against self-KV cache + fixed cross-KV."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], token, dtype)
+    h = h + jax.lax.dynamic_slice_in_dim(params["dec_pos"], cache_len, 1, 0).astype(dtype)[None]
+
+    def layer_fn(h, inp):
+        lp, cache_l = inp
+        hn = apply_norm(lp["ln1"], h, "layernorm")
+        y, new_self = decode_attention(
+            lp["self_attn"], hn, {"k": cache_l["k"], "v": cache_l["v"]},
+            cache_len, cfg=cfg, use_rope=False,
+        )
+        h = h + y
+        hn = apply_norm(lp["ln_x"], h, "layernorm")
+        y, _ = decode_attention(
+            lp["cross_attn"], hn, {"k": cache_l["ck"], "v": cache_l["cv"]},
+            jnp.int32(cfg.encoder_seq_len - 1), cfg=cfg, use_rope=False,
+            update_cache=False,
+        )
+        h = h + y
+        hn = apply_norm(lp["ln2"], h, "layernorm")
+        h = h + apply_mlp(lp["mlp"], hn, cfg)
+        new_cache_l = {"k": new_self["k"], "v": new_self["v"],
+                       "ck": cache_l["ck"], "cv": cache_l["cv"]}
+        return h, new_cache_l
+
+    h, new_cache = jax.lax.scan(layer_fn, h, (params["dec_layers"], cache))
+    h = apply_norm(params["ln_dec"], h, "layernorm")
+    logits = unembed_logits(params["embed"]["table"].T, h)
+    return logits, new_cache

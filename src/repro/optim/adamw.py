@@ -1,0 +1,80 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and a
+warmup+cosine schedule.  Flax/optax-free; states mirror the param tree so
+every sharding spec applies unchanged to the optimizer state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import TrainConfig
+from repro.utils import Params
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class AdamWState:
+    step: jnp.ndarray     # () int32
+    mu: Params            # first moment (f32, param tree)
+    nu: Params            # second moment (f32, param tree)
+
+
+def init_opt_state(params: Params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def opt_state_specs(param_specs: Params) -> Any:
+    """Optimizer-state spec tree mirroring the param specs."""
+    return AdamWState(step=(), mu=param_specs, nu=param_specs)
+
+
+def lr_schedule(step: jnp.ndarray, tc: TrainConfig) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, tc.warmup_steps))
+    progress = jnp.clip(
+        (step - tc.warmup_steps) / max(1, tc.total_steps - tc.warmup_steps), 0.0, 1.0
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> tuple[Params, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(
+    params: Params, grads: Params, state: AdamWState, tc: TrainConfig
+) -> tuple[Params, AdamWState, dict]:
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if tc.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = lr_schedule(state.step, tc)
+    b1, b2 = tc.beta1, tc.beta2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+    mu_hat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+    nu_hat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+
+    def upd(p, m, v):
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + tc.eps)
+        u = u + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu), {
+        "grad_norm": gnorm, "lr": lr,
+    }

@@ -1,0 +1,48 @@
+"""Gradient compression for cross-pod all-reduce: int8 quantisation with
+error feedback (EF-SGD style [arXiv:1901.09847]).
+
+At 1000+ node scale the pod-axis (DCN) gradient all-reduce is the scarcest
+bandwidth; int8 + EF cuts those bytes 4x vs f32 (2x vs bf16) while the
+error-feedback buffer keeps the update unbiased in the long run.  The
+quantiser is per-leaf symmetric (scale = max|g|/127).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import Params
+
+
+def quantize_int8(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(
+    grads: Params, error: Params
+) -> tuple[Params, Params]:
+    """Quantise (grads + carried error) to int8; return (dequantised grads,
+    new error buffers).  Wrap the all-reduce around the int8 payload on real
+    hardware; here the dequantised value is what enters the optimiser, so
+    tests verify the EF contraction property end-to-end."""
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(target)
+        deq = dequantize_int8(q, scale)
+        return deq, target - deq
+
+    flat = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda v: isinstance(v, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda v: isinstance(v, tuple))
+    return deq, new_err

@@ -1,0 +1,24 @@
+from repro.roofline.extract import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    RooflineReport,
+    active_param_count,
+    build_report,
+    model_flops_estimate,
+    parse_collectives,
+)
+from repro.roofline.hlo_cost import HloCostModel, analyze_hlo
+
+__all__ = [
+    "HBM_BW",
+    "HloCostModel",
+    "LINK_BW",
+    "PEAK_FLOPS",
+    "RooflineReport",
+    "active_param_count",
+    "analyze_hlo",
+    "build_report",
+    "model_flops_estimate",
+    "parse_collectives",
+]

@@ -1,0 +1,74 @@
+"""Hillclimbing diagnostics: which instructions dominate each roofline term.
+
+``top_contributors`` walks the trip-count-weighted HLO (same accounting as
+hlo_cost.py) and returns the largest byte/flop/collective contributors —
+the §Perf loop's "profile" (there is no wall-clock trace on this host)."""
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+from repro.roofline.hlo_cost import (
+    _BODY_RE,
+    _CALLS_RE,
+    _COLLECTIVES,
+    _FREE_OPS,
+    _TRIP_RE,
+    HloCostModel,
+)
+
+
+def _trip_multipliers(model: HloCostModel) -> dict[str, float]:
+    referenced = set()
+    for name, instrs in model.comps.items():
+        for i in instrs:
+            m = _BODY_RE.search(i.line)
+            if m:
+                referenced.add(m.group(1))
+    entries = [c for c in model.comps if "main" in c] or list(model.comps)
+    mult: dict[str, float] = {}
+
+    def walk(comp, factor):
+        mult[comp] = mult.get(comp, 0.0) + factor
+        for i in model.comps.get(comp, []):
+            if i.opcode == "while":
+                b = _BODY_RE.search(i.line)
+                t = _TRIP_RE.search(i.line)
+                trip = int(t.group(1)) if t else 1
+                if b and b.group(1) in model.comps:
+                    walk(b.group(1), factor * trip)
+
+    walk(entries[0], 1.0)
+    return mult
+
+
+def top_contributors(hlo_text: str, k: int = 15, kind: str = "bytes"):
+    """kind: "bytes" | "collective".  Returns [(value, opcode, out_shape,
+    computation), ...] sorted descending."""
+    model = HloCostModel(hlo_text)
+    mult = _trip_multipliers(model)
+    contrib: Counter = Counter()
+    skip = _FREE_OPS | {"while", "conditional", "call"}
+    for comp, f in mult.items():
+        for i in model.comps[comp]:
+            if i.opcode in skip:
+                continue
+            base = i.opcode.removesuffix("-start").removesuffix("-done")
+            if kind == "collective":
+                if base not in _COLLECTIVES or i.opcode.endswith("-done"):
+                    continue
+                val = model._operand_bytes(comp, i)
+            else:
+                if base in _COLLECTIVES:
+                    val = model._operand_bytes(comp, i) + i.out_bytes()
+                elif i.opcode == "dynamic-update-slice":
+                    continue
+                else:
+                    val = model._operand_bytes(comp, i) + i.out_bytes()
+            contrib[(i.opcode, i.out_text[:60], comp[:30])] += val * f
+    return [(v,) + key for key, v in contrib.most_common(k)]
+
+
+def print_top(hlo_text: str, k: int = 15, kind: str = "bytes") -> None:
+    for v, op, shape, comp in top_contributors(hlo_text, k, kind):
+        print(f"{v / 1e9:10.2f} GB  {op:22s} {shape:55s} {comp}")

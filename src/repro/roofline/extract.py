@@ -1,0 +1,234 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), per EXPERIMENTS.md §Roofline:
+
+    compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes   / (chips * HBM_BW)
+    collective = coll_bytes  / (chips * LINK_BW)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes; collective bytes are
+NOT in cost_analysis, so we parse the (SPMD-partitioned, i.e. per-device)
+HLO text and sum operand payloads of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops.
+
+Accounting convention (documented here once): the partitioned module IS the
+per-device program, so parsed quantities are per-chip.  We report
+``X_total = X_per_chip * chips`` so the formulas above hold verbatim with
+the chips factor cancelling.  cost_analysis FLOPs on the CPU backend count
+the per-device module the same way.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Optional
+
+# TPU v5e-class hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "u4": 1, "s4": 1,
+}
+
+# e.g. "bf16[256,4096]{1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9a-z]+)?|pred)\[([0-9,]*)\]")
+# LHS of an HLO instruction: "%name = <shape-or-tuple> <opcode>("
+_INSTR_RE = re.compile(r"=\s*(\(?[a-z0-9_\[\],{}\s/]*\)?)\s*([a-z0-9-]+)\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _operand_bytes(line: str) -> int:
+    """Sum payload bytes of typed operand references inside the parens."""
+    lparen = line.find("(")
+    if lparen < 0:
+        return 0
+    args = line[lparen:]
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(args))
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Per-device collective payload bytes from partitioned HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        opcode = m.group(2)
+        base = opcode.removesuffix("-start").removesuffix("-done")
+        if base not in COLLECTIVE_OPS:
+            continue
+        if opcode.endswith("-done"):
+            continue  # the -start carries the operands; don't double count
+        b = _operand_bytes(line)
+        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + b
+        stats.count_by_op[base] = stats.count_by_op.get(base, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-chip quantities (partitioned module)
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: dict
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    # usefulness
+    model_flops: float          # 6*N*D (dense) / 6*N_active*D (MoE); 2*N*D decode
+    flops_ratio: float          # MODEL_FLOPS / HLO_FLOPs_total
+    memory_analysis: Optional[str] = None
+    note: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def build_report(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: dict,
+    hlo_text: str,
+    model_flops: float,
+    memory_analysis: Optional[str] = None,
+    note: str = "",
+) -> RooflineReport:
+    """Derive the three terms from the compiled module.
+
+    FLOPs/bytes/collective-bytes come from the trip-count-aware HLO cost
+    model (roofline/hlo_cost.py); XLA's raw cost_analysis (which counts scan
+    bodies once) is kept in the note for reference.
+    """
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    totals = analyze_hlo(hlo_text)
+    flops = float(totals.flops)
+    byts = float(totals.bytes)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = totals.coll_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_flops = flops * chips
+    xla_raw = (
+        f"xla_cost_analysis(scan-bodies-once): flops={cost.get('flops')} "
+        f"bytes={cost.get('bytes accessed')}"
+    )
+    notes = "; ".join([note, xla_raw] + totals.notes) if note else "; ".join([xla_raw] + totals.notes)
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        coll_bytes_per_chip=float(totals.coll_bytes),
+        coll_breakdown={k: int(v) for k, v in totals.coll_by_op.items()},
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        flops_ratio=(model_flops / total_flops) if total_flops else 0.0,
+        memory_analysis=memory_analysis,
+        note=notes,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D train (N = active params, D = tokens);
+    2*N*D for single-token decode; 2*N*D for prefill forward-only."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_param_count(cfg) -> float:
+    """Active (per-token) parameter count from the config's dims."""
+    if cfg.family == "lstm_ae":
+        total = 0
+        for lx, lh in zip(cfg.lstm_ae.layer_input_sizes(), cfg.lstm_ae.layer_sizes()):
+            total += 4 * lh * (lx + lh) + 8 * lh
+        return float(total)
+
+    d, f, v, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.num_layers
+    hd = cfg.resolved_head_dim()
+    attn = d * hd * cfg.num_heads + 2 * d * hd * cfg.num_kv_heads + hd * cfg.num_heads * d
+
+    def ffn_active():
+        if cfg.moe is not None:
+            dense = 3 * d * f
+            return cfg.moe.top_k * dense
+        if cfg.activation == "swiglu":
+            return 3 * d * f
+        return 2 * d * f
+
+    total = 0.0
+    if cfg.family == "whisper":
+        enc = cfg.encoder_layers * (attn + 2 * d * f)
+        dec = L * (2 * attn + 2 * d * f)
+        total = enc + dec
+    elif cfg.family == "rwkv6":
+        tm = 5 * d * d + 2 * d * cfg.rwkv.decay_lora
+        cm = 2 * d * f + d * d
+        total = L * (tm + cm)
+    elif cfg.family == "jamba":
+        from repro.layers.mamba import mamba_dims
+        d_inner, d_state, dt_rank = mamba_dims(cfg)
+        mamba_p = 2 * d * d_inner + d_inner * (dt_rank + 2 * d_state) + dt_rank * d_inner + d_inner * d
+        n_attn = L // cfg.attn_every
+        n_mamba = L - n_attn
+        n_moe = L // cfg.moe.every if cfg.moe else 0
+        n_mlp = L - n_moe
+        moe_active = cfg.moe.top_k * 3 * d * f if cfg.moe else 0
+        total = n_attn * attn + n_mamba * mamba_p + n_moe * moe_active + n_mlp * 3 * d * f
+    else:
+        total = L * (attn + ffn_active())
+    total += 2 * v * d  # embed + unembed (tied counts once for compute anyway)
+    return float(total)

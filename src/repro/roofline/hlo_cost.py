@@ -1,0 +1,396 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE — a
+10-layer scanned transformer reports one layer of FLOPs.  Every model here
+scans over layers (and attention scans over KV chunks), so we re-derive the
+three roofline quantities from the compiled module text, multiplying each
+while body by its ``known_trip_count`` annotation:
+
+* flops            — dot ops: 2 * prod(out_dims) * K (contracting size from
+                     the printed dims); fusion wrappers recursed.
+* bytes            — per *top-level* instruction (fusion boundaries =
+                     buffer traffic): operands + outputs, for all opcodes
+                     except free ones (tuple/gte/parameter/bitcast/constant).
+* collective bytes — operand payloads of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute.
+
+All quantities are per-device (the SPMD-partitioned module is the
+per-device program).  Unknown trip counts fall back to 1 and are recorded
+in ``notes``.  Operand shapes are resolved through a per-computation symbol
+table (HLO prints operands by name, not type).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9a-z]+)?|pred)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+_OPCODE_RE = re.compile(r"=\s*[^=]*?\s([a-z][a-z0-9-]*)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "u4": 1, "s4": 1,
+}
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(
+        _shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+        for dt, dims in _SHAPE_RE.findall(text)
+    )
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    out_text: str          # LHS type section, e.g. "f32[128,128]{1,0}" or tuple
+    operand_names: list
+    line: str
+    is_root: bool = False
+
+    def out_bytes(self) -> int:
+        return _shapes_bytes(self.out_text)
+
+    def out_shapes(self) -> list:
+        return _SHAPE_RE.findall(self.out_text)
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+    notes: list = field(default_factory=list)
+
+    def add(self, other: "CostTotals", factor: float = 1.0):
+        self.flops += other.flops * factor
+        self.bytes += other.bytes * factor
+        self.coll_bytes += other.coll_bytes * factor
+        for k, v in other.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0) + v * factor
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + v * factor
+        for n in other.notes:
+            if n not in self.notes:
+                self.notes.append(n)
+
+
+_RHS_OPCODE_RE = re.compile(r"(?:^|[\s)])([a-z][a-z0-9-]*)\(")
+
+
+def _parse_instruction(line: str):
+    if "=" not in line:
+        return None
+    lhs, rhs = line.split("=", 1)
+    name_m = _NAME_RE.search(lhs)
+    if not name_m:
+        return None
+    # the opcode is the identifier immediately before the operand paren; the
+    # output type section may itself contain parens (tuple types), so search
+    # for the first "word(" not inside a type (types start with dtype[ which
+    # never precedes "(").
+    m = _RHS_OPCODE_RE.search(rhs)
+    if not m:
+        return None
+    opcode = m.group(1)
+    out_text = rhs[: m.start()].strip()
+    lp = rhs.find("(", m.start())
+    rp = rhs.find(")", lp)
+    operand_names = _NAME_RE.findall(rhs[lp : rp + 1]) if rp > lp else []
+    return Instruction(
+        name=name_m.group(1), opcode=opcode, out_text=out_text,
+        operand_names=operand_names, line=line,
+        is_root=lhs.lstrip().startswith("ROOT"),
+    )
+
+
+def parse_computations(hlo: str) -> dict[str, list[Instruction]]:
+    comps: dict[str, list[Instruction]] = {}
+    current = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("ENTRY"):
+            name = line.split("%", 1)[1].split(" ", 1)[0].split("(")[0].rstrip()
+            current = name
+            comps[current] = []
+            continue
+        if line.startswith("%") and line.endswith("{") and "= " not in line.split("{")[0]:
+            name = line[1:].split(" ", 1)[0].split("(")[0]
+            current = name
+            comps[current] = []
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is not None:
+            instr = _parse_instruction(line)
+            if instr is not None:
+                comps[current].append(instr)
+    return comps
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps = parse_computations(hlo_text)
+        # symbol tables: per-computation name -> Instruction, plus global
+        self.symbols: dict[str, dict[str, Instruction]] = {}
+        self.global_symbols: dict[str, Instruction] = {}
+        for cname, instrs in self.comps.items():
+            table = {}
+            for i in instrs:
+                table[i.name] = i
+                self.global_symbols.setdefault(i.name, i)
+            self.symbols[cname] = table
+        self._memo: dict[str, CostTotals] = {}
+        self._fusion_flops_memo: dict[str, float] = {}
+
+    def _operand_bytes(self, comp: str, instr: Instruction) -> int:
+        table = self.symbols.get(comp, {})
+        total = 0
+        for nm in instr.operand_names:
+            src = table.get(nm) or self.global_symbols.get(nm)
+            if src is not None:
+                total += src.out_bytes()
+        return total
+
+    def _operand_shapes(self, comp: str, instr: Instruction) -> list:
+        table = self.symbols.get(comp, {})
+        shapes = []
+        for nm in instr.operand_names:
+            src = table.get(nm) or self.global_symbols.get(nm)
+            shapes.append(src.out_shapes() if src is not None else [])
+        return shapes
+
+    def _dot_flops(self, comp: str, instr: Instruction) -> float:
+        op_shapes = self._operand_shapes(comp, instr)
+        if not op_shapes or not op_shapes[0]:
+            return 0.0
+        lhs = op_shapes[0][0]
+        lhs_dims = [int(d) for d in lhs[1].split(",")] if lhs[1] else []
+        m = _CONTRACT_RE.search(instr.line)
+        if not m:
+            return 0.0
+        k = 1
+        if m.group(1):
+            for idx in m.group(1).split(","):
+                if int(idx) < len(lhs_dims):
+                    k *= lhs_dims[int(idx)]
+        outs = instr.out_shapes()
+        if not outs:
+            return 0.0
+        return 2.0 * _shape_elems(outs[0][1]) * k
+
+    def _conv_flops(self, comp: str, instr: Instruction) -> float:
+        op_shapes = self._operand_shapes(comp, instr)
+        outs = instr.out_shapes()
+        if len(op_shapes) < 2 or not op_shapes[1] or not outs:
+            return 0.0
+        kshape = op_shapes[1][0]
+        kdims = [int(d) for d in kshape[1].split(",")] if kshape[1] else [1]
+        kernel_elems = _shape_elems(kshape[1])
+        cout = kdims[-1] if kdims else 1
+        return 2.0 * _shape_elems(outs[0][1]) * (kernel_elems / max(1, cout))
+
+    def fusion_inplace_bytes(self, callee: str):
+        """In-place adjustment for fusions whose root is (or is a tuple
+        containing) dynamic-update-slice: XLA aliases the big buffer and
+        writes only the update slice, so counting the full fusion output
+        overstates traffic by the buffer/update ratio (orders of magnitude
+        for scan-ys accumulation).  Returns adjusted bytes or None."""
+        instrs = self.comps.get(callee)
+        if not instrs:
+            return None
+        root = next((i for i in instrs if i.is_root), instrs[-1])
+        table = self.symbols.get(callee, {})
+
+        def dus_update(instr) -> int:
+            if len(instr.operand_names) >= 2:
+                src = table.get(instr.operand_names[1])
+                if src is not None:
+                    return src.out_bytes()
+            return 0
+
+        if root.opcode == "dynamic-update-slice":
+            return 2 * dus_update(root)
+        if root.opcode == "tuple":
+            total, any_dus = 0, False
+            for nm in root.operand_names:
+                src = table.get(nm)
+                if src is None:
+                    continue
+                if src.opcode == "dynamic-update-slice":
+                    any_dus = True
+                    total += 2 * dus_update(src)
+                else:
+                    total += 2 * src.out_bytes()
+            return total if any_dus else None
+        return None
+
+    def fusion_flops(self, comp: str) -> float:
+        if comp in self._fusion_flops_memo:
+            return self._fusion_flops_memo[comp]
+        self._fusion_flops_memo[comp] = 0.0  # cycle guard
+        total = 0.0
+        for instr in self.comps.get(comp, []):
+            if instr.opcode == "dot":
+                total += self._dot_flops(comp, instr)
+            elif instr.opcode == "convolution":
+                total += self._conv_flops(comp, instr)
+            else:
+                m = _CALLS_RE.search(instr.line) or _TO_APPLY_RE.search(instr.line)
+                if m and m.group(1) in self.comps:
+                    total += self.fusion_flops(m.group(1))
+        self._fusion_flops_memo[comp] = total
+        return total
+
+    def computation_cost(self, comp: str) -> CostTotals:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = CostTotals()  # cycle guard
+        total = CostTotals()
+        for instr in self.comps.get(comp, []):
+            op = instr.opcode
+            if op == "while":
+                body = _BODY_RE.search(instr.line)
+                cond = _COND_RE.search(instr.line)
+                trip_m = _TRIP_RE.search(instr.line)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                if not trip_m:
+                    total.notes.append(f"while without known_trip_count in {comp}")
+                if body and body.group(1) in self.comps:
+                    total.add(self.computation_cost(body.group(1)), trip)
+                if cond and cond.group(1) in self.comps:
+                    total.add(self.computation_cost(cond.group(1)), trip)
+                continue
+            if op == "conditional":
+                m = _BRANCHES_RE.search(instr.line)
+                if m:
+                    branch_costs = [
+                        self.computation_cost(b.strip().lstrip("%"))
+                        for b in m.group(1).split(",")
+                        if b.strip().lstrip("%") in self.comps
+                    ]
+                    if branch_costs:
+                        total.add(max(branch_costs, key=lambda c: c.flops + c.bytes))
+                continue
+            if op in ("call", "async-start"):
+                m = _CALLS_RE.search(instr.line) or _TO_APPLY_RE.search(instr.line)
+                if m and m.group(1) in self.comps:
+                    total.add(self.computation_cost(m.group(1)))
+
+            base = op.removesuffix("-start").removesuffix("-done")
+            if base in _COLLECTIVES:
+                if not op.endswith("-done"):
+                    payload = self._operand_bytes(comp, instr)
+                    total.coll_bytes += payload
+                    total.coll_by_op[base] = total.coll_by_op.get(base, 0) + payload
+                    total.coll_count[base] = total.coll_count.get(base, 0) + 1
+                    total.bytes += payload + instr.out_bytes()
+                continue
+
+            if op == "dot":
+                total.flops += self._dot_flops(comp, instr)
+            elif op == "convolution":
+                total.flops += self._conv_flops(comp, instr)
+            elif op == "fusion":
+                m = _CALLS_RE.search(instr.line)
+                if m and m.group(1) in self.comps:
+                    total.flops += self.fusion_flops(m.group(1))
+                    adj = self.fusion_inplace_bytes(m.group(1))
+                    if adj is not None:
+                        total.bytes += adj
+                        continue
+
+            if op in _FREE_OPS:
+                continue
+            # HBM-traffic model: reads = operand bytes, writes = output
+            # bytes, at post-fusion instruction granularity.  In-place /
+            # aliasing ops only move their slice, not the whole buffer:
+            if op == "dynamic-update-slice":
+                # reads update, writes slice (big operand+output aliased)
+                upd = 0
+                table = self.symbols.get(comp, {})
+                if len(instr.operand_names) >= 2:
+                    src = table.get(instr.operand_names[1]) or self.global_symbols.get(
+                        instr.operand_names[1]
+                    )
+                    if src is not None:
+                        upd = src.out_bytes()
+                total.bytes += 2 * upd
+            elif op == "dynamic-slice":
+                total.bytes += 2 * instr.out_bytes()  # read + write the slice
+            elif op == "scatter":
+                # reads updates+indices, writes touched rows (~updates)
+                table = self.symbols.get(comp, {})
+                upd = 0
+                for nm in instr.operand_names[1:]:
+                    src = table.get(nm) or self.global_symbols.get(nm)
+                    if src is not None:
+                        upd += src.out_bytes()
+                total.bytes += 2 * upd
+            elif op == "gather":
+                total.bytes += 2 * instr.out_bytes()
+            else:
+                total.bytes += self._operand_bytes(comp, instr) + instr.out_bytes()
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> CostTotals:
+        referenced = set()
+        for name, instrs in self.comps.items():
+            for i in instrs:
+                for rx in (_CALLS_RE, _COND_RE, _BODY_RE, _TO_APPLY_RE):
+                    m = rx.search(i.line)
+                    if m:
+                        referenced.add(m.group(1))
+                m = _BRANCHES_RE.search(i.line)
+                if m:
+                    for b in m.group(1).split(","):
+                        referenced.add(b.strip().lstrip("%"))
+        candidates = [n for n in self.comps if n not in referenced]
+        entry = None
+        for c in candidates:
+            if "main" in c:
+                entry = c
+                break
+        if entry is None and candidates:
+            entry = candidates[0]
+        if entry is None:
+            return CostTotals(notes=["no entry computation found"])
+        return self.computation_cost(entry)
+
+
+def analyze_hlo(hlo_text: str) -> CostTotals:
+    return HloCostModel(hlo_text).entry_cost()

@@ -1,0 +1,60 @@
+"""Re-apply the (possibly updated) HLO cost model to saved dry-run
+artifacts without recompiling: reads ``<cell>.hlo.zst`` next to each JSON,
+rebuilds the roofline record, and rewrites the JSON in place.
+
+Usage: PYTHONPATH=src python -m repro.roofline.reanalyze [dir ...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import zstandard
+
+from repro.config import get_config, shapes_for
+from repro.roofline.extract import build_report, model_flops_estimate
+
+
+def reanalyze_dir(d: Path) -> int:
+    n = 0
+    for hlo_path in sorted(d.glob("*.hlo.zst")):
+        cell_id = hlo_path.name.removesuffix(".hlo.zst")
+        json_path = d / f"{cell_id}.json"
+        if not json_path.exists():
+            continue
+        rec = json.loads(json_path.read_text())
+        if rec.get("status") != "ok":
+            continue
+        hlo = zstandard.ZstdDecompressor().decompress(hlo_path.read_bytes()).decode()
+        arch, shape_name, mesh_name = cell_id.split("__")
+        cfg = get_config(arch)
+        shape = next(s for s in shapes_for(cfg) if s.name == shape_name)
+        report = build_report(
+            arch=arch,
+            shape=shape_name,
+            mesh_name=mesh_name,
+            chips=rec["chips"],
+            cost={},
+            hlo_text=hlo,
+            model_flops=model_flops_estimate(cfg, shape),
+            memory_analysis=rec.get("memory_analysis"),
+        )
+        new_rec = json.loads(report.to_json())
+        new_rec["status"] = "ok"
+        new_rec["compile_s"] = rec.get("compile_s")
+        json_path.write_text(json.dumps(new_rec, indent=1))
+        n += 1
+    return n
+
+
+def main() -> None:
+    dirs = [Path(p) for p in (sys.argv[1:] or ["experiments/dryrun", "experiments/dryrun_opt"])]
+    for d in dirs:
+        if d.exists():
+            n = reanalyze_dir(d)
+            print(f"[reanalyze] {d}: {n} cells updated")
+
+
+if __name__ == "__main__":
+    main()

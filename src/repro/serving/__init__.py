@@ -1,0 +1,3 @@
+from repro.serving.step import build_decode_step, build_prefill_step, greedy_decode_loop
+
+__all__ = ["build_decode_step", "build_prefill_step", "greedy_decode_loop"]

@@ -1,0 +1,43 @@
+"""Serve-step builders: prefill (prompt -> KV cache/state + first logits)
+and decode (one token against the cache), under the same mesh-context
+machinery as training.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, mesh_context, rules_for_mesh
+from repro.models.api import ModelAPI
+
+
+def build_prefill_step(api: ModelAPI, mesh=None, rules: Optional[ShardingRules] = None,
+                       q_chunks: int = 1, kv_chunk: int = 1024):
+    def prefill_step(params, batch):
+        with mesh_context(mesh, rules or (rules_for_mesh(mesh) if mesh else None)):
+            return api.prefill(params, batch, q_chunks=q_chunks, kv_chunk=kv_chunk)
+    return prefill_step
+
+
+def build_decode_step(api: ModelAPI, mesh=None, rules: Optional[ShardingRules] = None):
+    def decode_step(params, token, cache, cache_len):
+        with mesh_context(mesh, rules or (rules_for_mesh(mesh) if mesh else None)):
+            return api.decode(params, token, cache, cache_len)
+    return decode_step
+
+
+def greedy_decode_loop(api: ModelAPI, params, cache, first_token, cache_len0,
+                       num_steps: int):
+    """Greedy autoregressive loop (CPU-scale examples/tests)."""
+    def body(carry, _):
+        token, cache, n = carry
+        logits, cache = api.decode(params, token, cache, n)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return (nxt, cache, n + 1), nxt[:, 0]
+
+    (_, cache, _), tokens = jax.lax.scan(
+        body, (first_token, cache, cache_len0), None, length=num_steps
+    )
+    return jnp.moveaxis(tokens, 0, 1), cache  # (B, num_steps)

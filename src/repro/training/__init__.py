@@ -1,0 +1,8 @@
+from repro.training.step import (
+    TrainState,
+    build_train_step,
+    init_train_state,
+    train_state_specs,
+)
+
+__all__ = ["TrainState", "build_train_step", "init_train_state", "train_state_specs"]

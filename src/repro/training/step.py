@@ -1,0 +1,114 @@
+"""Train-step builder: value_and_grad + AdamW under pjit, with optional
+microbatch gradient accumulation and int8+error-feedback gradient
+compression.  All sharding constraints in the model code activate through
+the mesh context captured at build time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import TrainConfig
+from repro.distributed.sharding import ShardingRules, mesh_context, rules_for_mesh
+from repro.models.api import ModelAPI
+from repro.optim import (
+    AdamWState,
+    adamw_update,
+    compress_grads,
+    init_error_feedback,
+    init_opt_state,
+    opt_state_specs,
+)
+from repro.utils import Params
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class TrainState:
+    params: Params
+    opt: AdamWState
+    ef: Optional[Params]  # error-feedback buffers (grad compression) or None
+
+
+def init_train_state(api: ModelAPI, key: jax.Array, tc: TrainConfig) -> TrainState:
+    params = api.init(key)
+    return TrainState(
+        params=params,
+        opt=init_opt_state(params),
+        ef=init_error_feedback(params) if tc.grad_compression == "int8_ef" else None,
+    )
+
+
+def train_state_specs(api: ModelAPI, tc: TrainConfig) -> TrainState:
+    ps = api.param_specs()
+    return TrainState(
+        params=ps,
+        opt=opt_state_specs(ps),
+        ef=ps if tc.grad_compression == "int8_ef" else None,
+    )
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatch {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def build_train_step(
+    api: ModelAPI,
+    tc: TrainConfig,
+    mesh=None,
+    rules: Optional[ShardingRules] = None,
+):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    loss_kwargs = dict(
+        remat=(tc.remat != "none"),
+        loss_chunk=tc.loss_chunk,
+    )
+
+    def grads_of(params: Params, batch: dict):
+        def loss_fn(p):
+            return api.loss(p, batch, **loss_kwargs)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: dict):
+        ctx = mesh_context(mesh, rules or (rules_for_mesh(mesh) if mesh else None))
+        with ctx:
+            if tc.microbatch > 1:
+                micro = _split_microbatches(batch, tc.microbatch)
+
+                def acc_fn(g_acc, mb):
+                    g, m = grads_of(state.params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                    )
+                    return g_acc, m
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+                )
+                g_sum, ms = jax.lax.scan(acc_fn, g0, micro)
+                grads = jax.tree.map(lambda g: g / tc.microbatch, g_sum)
+                metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+            else:
+                grads, metrics = grads_of(state.params, batch)
+
+            ef = state.ef
+            if tc.grad_compression == "int8_ef":
+                grads, ef = compress_grads(grads, ef)
+
+            new_params, new_opt, opt_metrics = adamw_update(
+                state.params, grads, state.opt, tc
+            )
+            metrics.update(opt_metrics)
+        return TrainState(params=new_params, opt=new_opt, ef=ef), metrics
+
+    return train_step

@@ -1,0 +1,21 @@
+from repro.utils.tree import (
+    Params,
+    assert_finite,
+    cast_floating,
+    flatten_with_names,
+    split_keys,
+    tree_bytes,
+    tree_size,
+    truncated_normal_init,
+)
+
+__all__ = [
+    "Params",
+    "assert_finite",
+    "cast_floating",
+    "flatten_with_names",
+    "split_keys",
+    "tree_bytes",
+    "tree_size",
+    "truncated_normal_init",
+]

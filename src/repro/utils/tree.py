@@ -1,0 +1,83 @@
+"""Pytree utilities used across the framework.
+
+The framework is deliberately flax-free: parameters are nested dicts of
+jnp arrays, and every module exposes ``init(key, cfg) -> params`` plus an
+``apply(params, ...)`` function.  These helpers keep that style ergonomic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict of arrays
+
+
+def tree_size(tree: Params) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Params) -> int:
+    """Total bytes across all leaves."""
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_map_with_path(fn: Callable[[tuple, Any], Any], tree: Params) -> Params:
+    """jax.tree_util.tree_map_with_path with string paths."""
+
+    def _fn(path, leaf):
+        keys = tuple(
+            p.key if hasattr(p, "key") else getattr(p, "idx", str(p)) for p in path
+        )
+        return fn(keys, leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def flatten_with_names(tree: Params, sep: str = "/") -> Iterator[tuple[str, Any]]:
+    """Yield (dotted-name, leaf) pairs in deterministic order."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        name = sep.join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path
+        )
+        yield name, leaf
+
+
+def split_keys(key: jax.Array, names: list[str]) -> dict[str, jax.Array]:
+    """Split a PRNG key into a dict keyed by ``names`` (order-stable)."""
+    keys = jax.random.split(key, len(names))
+    return {n: k for n, k in zip(names, keys)}
+
+
+def truncated_normal_init(
+    key: jax.Array, shape: tuple[int, ...], fan_in: int | None = None, dtype=jnp.float32
+) -> jax.Array:
+    """He-style truncated normal initialisation (std = 1/sqrt(fan_in))."""
+    if fan_in is None:
+        fan_in = shape[0] if len(shape) >= 1 else 1
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def cast_floating(tree: Params, dtype) -> Params:
+    """Cast floating-point leaves to ``dtype`` (non-float leaves untouched)."""
+
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)
+
+
+def assert_finite(tree: Params, name: str = "tree") -> None:
+    """Raise if any leaf contains NaN/Inf (host-side check for tests)."""
+    for path, leaf in flatten_with_names(tree):
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating) and not np.all(np.isfinite(arr)):
+            raise FloatingPointError(f"non-finite values in {name}/{path}")

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests run on the REAL single CPU device (the 512-device override is
+# exclusively for launch/dryrun.py, per the assignment)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

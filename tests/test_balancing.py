@@ -1,0 +1,128 @@
+"""Properties of the paper's dataflow-balancing equations (Section 3.3)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import get_config
+from repro.config.core import LSTMAEConfig
+from repro.core.balancing import (
+    accelerator_latency_cycles,
+    balance_model,
+    balanced_rh,
+    balanced_rx,
+    lstm_layer_flops,
+    mvm_h_latency,
+    mvm_x_latency,
+    sequential_latency_cycles,
+    stage_partition,
+    utilization,
+)
+from repro.core.latency import PAPER_RH_M
+
+
+def test_paper_models_fully_balanced():
+    """With the paper's Table-1 RH_m, every module's per-timestep latency
+    equals the bottleneck's (Eq 8's purpose)."""
+    for name, rh_m in PAPER_RH_M.items():
+        cfg = get_config(name).lstm_ae
+        balances = balance_model(cfg, rh_m)
+        lats = [b.lat_t for b in balances]
+        assert len(set(lats)) == 1, f"{name}: unbalanced {lats}"
+        assert utilization(balances) == pytest.approx(1.0)
+
+
+def test_eq8_identity_at_bottleneck():
+    # Eq (8) must return RH_m for the bottleneck module itself
+    for rh_m in (1, 2, 4, 8):
+        assert balanced_rh(32, 32, rh_m) == pytest.approx(rh_m)
+
+
+@given(
+    lh_m=st.sampled_from([16, 32, 64, 128]),
+    ratio=st.sampled_from([1, 2, 4, 8]),
+    rh_m=st.integers(min_value=1, max_value=8),
+)
+def test_eq8_exact_balance_for_power_of_two(lh_m, ratio, rh_m):
+    """For power-of-two layer sizes (the paper's AE family), Eq (8) gives
+    integer RH_i and exact H_t equality."""
+    lh_i = lh_m // ratio
+    rh_i = balanced_rh(lh_i, lh_m, rh_m)
+    assert rh_i == int(rh_i)
+    assert mvm_h_latency(lh_i, int(rh_i)) == mvm_h_latency(lh_m, rh_m)
+
+
+@given(
+    lx=st.integers(min_value=4, max_value=128),
+    lh=st.integers(min_value=4, max_value=128),
+    rh=st.integers(min_value=1, max_value=16),
+)
+def test_eq7_floor_preserves_bottleneck(lx, lh, rh):
+    """Flooring fractional RX keeps X_t <= H_t + LX (i.e. the intra-module
+    bottleneck stays the H path up to the one-element rounding remainder)."""
+    rx = max(1, math.floor(balanced_rx(lx, lh, rh)))
+    x_t = mvm_x_latency(lx, lh, rx)
+    h_t = mvm_h_latency(lh, rh)
+    if balanced_rx(lx, lh, rh) >= 1:
+        assert x_t <= h_t + lx  # floor slack is < 1 cycle/element
+
+
+def test_eq1_dataflow_beats_sequential():
+    """Temporal parallelism's headline claim: for T >> N the dataflow
+    latency approaches sum/max = depth-fold speedup over layer-by-layer."""
+    cfg = get_config("lstm-ae-f32-d6").lstm_ae
+    balances = balance_model(cfg, 1)
+    t = 512
+    df = accelerator_latency_cycles(t, balances)
+    sq = sequential_latency_cycles(t, balances)
+    n = len(balances)
+    speedup = sq / df
+    assert speedup > 0.9 * n  # balanced modules -> ~N-fold
+
+
+@given(
+    costs=st.lists(st.floats(min_value=1, max_value=1e4), min_size=1, max_size=9),
+    n_stages=st.integers(min_value=1, max_value=5),
+)
+@settings(max_examples=200)
+def test_stage_partition_optimal(costs, n_stages):
+    """The DP must match brute-force enumeration of contiguous partitions."""
+    assignment, bottleneck = stage_partition(costs, n_stages)
+    # brute force over all contiguous partitions into <= n_stages groups
+    n = len(costs)
+
+    def brute(i, stages_left):
+        if i == n:
+            return 0.0
+        if stages_left == 0:
+            return float("inf")
+        best = float("inf")
+        acc = 0.0
+        for j in range(i, n):
+            acc += costs[j]
+            best = min(best, max(acc, brute(j + 1, stages_left - 1)))
+        return best
+
+    expected = brute(0, n_stages)
+    assert bottleneck == pytest.approx(expected, rel=1e-9)
+    # assignment consistency: contiguous, non-decreasing, realises bottleneck
+    assert all(b - a in (0, 1) for a, b in zip(assignment, assignment[1:]))
+    group_costs = {}
+    for c, s in zip(costs, assignment):
+        group_costs[s] = group_costs.get(s, 0.0) + c
+    assert max(group_costs.values()) == pytest.approx(bottleneck, rel=1e-9)
+
+
+def test_flops_model_matches_dims():
+    assert lstm_layer_flops(32, 16) == 4 * 16 * 48
+
+
+def test_resource_table_ordering():
+    """Paper Table 1: wider models need bigger RH_m; the balanced multiplier
+    demand must decrease with RH_m (Eqs 5/6)."""
+    f32 = balance_model(get_config("lstm-ae-f32-d2").lstm_ae, 1)
+    f64_rh1 = balance_model(get_config("lstm-ae-f64-d2").lstm_ae, 1)
+    f64_rh4 = balance_model(get_config("lstm-ae-f64-d2").lstm_ae, 4)
+    mults = lambda bs: sum(b.mx + b.mh for b in bs)
+    assert mults(f64_rh1) > mults(f32)        # wider at same reuse -> more DSPs
+    assert mults(f64_rh4) < mults(f64_rh1)    # higher reuse -> fewer DSPs

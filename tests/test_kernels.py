@@ -1,0 +1,139 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lstm import init_lstm_cell, lstm_cell
+from repro.kernels.lstm_cell import pack_weights
+from repro.kernels.ops import flash_attention_op, lstm_cell_op, wkv6_op
+from repro.kernels.ref import ref_attention, ref_lstm_cell, ref_wkv6
+
+
+@pytest.mark.parametrize("in_dim,hidden", [(16, 16), (32, 64), (64, 128), (128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lstm_cell_kernel_sweep(in_dim, hidden, dtype):
+    key = jax.random.PRNGKey(in_dim * hidden)
+    ks = jax.random.split(key, 4)
+    p = init_lstm_cell(ks[0], in_dim, hidden)
+    b = 64
+    x = jax.random.normal(ks[1], (b, in_dim), dtype)
+    h = jax.random.normal(ks[2], (b, hidden), dtype)
+    c = jax.random.normal(ks[3], (b, hidden), jnp.float32)
+    hk, ck = lstm_cell_op(p, x, h, c, block_b=32, block_h=min(64, hidden), interpret=True)
+    wx, wh, bb = pack_weights(p)
+    hr, cr = ref_lstm_cell(x, h, c, wx, wh, bb)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(hk, np.float32), np.asarray(hr, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(cr), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("pwl", [False, True])
+def test_lstm_cell_kernel_matches_framework_cell(pwl):
+    """Kernel == the framework's lstm_cell (the layer actually deployed)."""
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 4)
+    p = init_lstm_cell(ks[0], 32, 64)
+    x = jax.random.normal(ks[1], (16, 32))
+    h = jax.random.normal(ks[2], (16, 64))
+    c = jax.random.normal(ks[3], (16, 64))
+    hk, ck = lstm_cell_op(p, x, h, c, block_b=16, block_h=32, pwl=pwl, interpret=True)
+    h2, c2 = lstm_cell(p, x, h, c, pwl=pwl)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(h2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(c2), rtol=1e-5, atol=1e-6)
+
+
+def test_lstm_cell_kernel_block_invariance():
+    """block_h is the reuse-factor knob: results must not depend on it."""
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 4)
+    p = init_lstm_cell(ks[0], 64, 128)
+    x = jax.random.normal(ks[1], (32, 64))
+    h = jax.random.normal(ks[2], (32, 128))
+    c = jax.random.normal(ks[3], (32, 128))
+    outs = [
+        lstm_cell_op(p, x, h, c, block_b=bb, block_h=bh, interpret=True)
+        for bb, bh in [(32, 128), (16, 64), (8, 32), (32, 32)]
+    ]
+    for hk, ck in outs[1:]:
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(outs[0][0]), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(ck), np.asarray(outs[0][1]), rtol=1e-6)
+
+
+@pytest.mark.parametrize("t_len,b,in_dim,hidden", [(4, 4, 16, 16), (12, 8, 32, 64),
+                                                   (7, 2, 64, 128)])
+@pytest.mark.parametrize("pwl", [False, True])
+def test_lstm_seq_kernel_matches_layer_scan(t_len, b, in_dim, hidden, pwl):
+    """Sequence-streaming kernel (state VMEM-resident) == lstm_layer scan."""
+    from repro.core.lstm import lstm_layer
+    from repro.kernels.ops import lstm_seq_op
+
+    key = jax.random.PRNGKey(t_len + hidden)
+    ks = jax.random.split(key, 2)
+    p = init_lstm_cell(ks[0], in_dim, hidden)
+    xs = jax.random.normal(ks[1], (t_len, b, in_dim))
+    ys_k, (h_k, c_k) = lstm_seq_op(p, xs, block_b=min(4, b), pwl=pwl, interpret=True)
+    ys_r, (h_r, c_r) = lstm_layer(p, xs, pwl=pwl)
+    np.testing.assert_allclose(np.asarray(ys_k), np.asarray(ys_r), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("t_len,hd,h", [(8, 16, 2), (32, 32, 4), (64, 64, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_kernel_sweep(t_len, hd, h, dtype):
+    key = jax.random.PRNGKey(t_len + hd)
+    ks = jax.random.split(key, 6)
+    b = 2
+    r = (jax.random.normal(ks[0], (b, t_len, h, hd)) * 0.3).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, t_len, h, hd)) * 0.3).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, t_len, h, hd)) * 0.3).astype(dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t_len, h, hd))).astype(jnp.float32)
+    u = (jax.random.normal(ks[4], (h, hd)) * 0.1).astype(jnp.float32)
+    s0 = jax.random.normal(ks[5], (b, h, hd, hd)) * 0.1
+    yk, sk = wkv6_op(r, k, v, w, u, s0, interpret=True)
+    yr, sr = ref_wkv6(r, k, v, w, u, s0)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=tol, atol=tol)
+
+
+def test_wkv6_kernel_chains_across_chunks():
+    """Two chunked kernel calls (state passed through) == one long ref run."""
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 5)
+    b, t, h, hd = 2, 32, 2, 16
+    r = jax.random.normal(ks[0], (b, t, h, hd)) * 0.3
+    k = jax.random.normal(ks[1], (b, t, h, hd)) * 0.3
+    v = jax.random.normal(ks[2], (b, t, h, hd)) * 0.3
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, hd)))
+    u = jax.random.normal(ks[4], (h, hd)) * 0.1
+    s0 = jnp.zeros((b, h, hd, hd))
+    y1, s1 = wkv6_op(r[:, :16], k[:, :16], v[:, :16], w[:, :16], u, s0, interpret=True)
+    y2, s2 = wkv6_op(r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:], u, s1, interpret=True)
+    yr, sr = ref_wkv6(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.concatenate([y1, y2], axis=1), np.asarray(yr),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sr), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("s,d,blocks", [(128, 64, (64, 64)), (256, 64, (64, 128)),
+                                        (256, 128, (128, 64))])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, d, blocks, causal, dtype):
+    key = jax.random.PRNGKey(s + d)
+    ks = jax.random.split(key, 3)
+    b, h = 2, 3
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, h, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, h, d), dtype)
+    out = flash_attention_op(q, k, v, causal=causal, block_q=blocks[0],
+                             block_k=blocks[1], interpret=True)
+    ref = jnp.swapaxes(
+        ref_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                      jnp.swapaxes(v, 1, 2), causal=causal), 1, 2)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,129 @@
+"""Training substrate: loss decreases, microbatch-accumulation equivalence,
+grad compression (error feedback), optimizer behaviour, chunked xent."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig, reduced_config
+from repro.data import LMDataConfig, LMIterator
+from repro.models import build_model
+from repro.optim import (
+    adamw_update,
+    compress_grads,
+    init_error_feedback,
+    init_opt_state,
+    lr_schedule,
+    quantize_int8,
+    dequantize_int8,
+)
+from repro.training import build_train_step, init_train_state
+
+
+def test_loss_decreases_tinyllama():
+    cfg = reduced_config("tinyllama-1.1b")
+    api = build_model(cfg)
+    tc = TrainConfig(learning_rate=3e-3, warmup_steps=5, total_steps=40,
+                     loss_chunk=32, grad_clip=1.0)
+    state = init_train_state(api, jax.random.PRNGKey(0), tc)
+    step = jax.jit(build_train_step(api, tc))
+    it = LMIterator(LMDataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8))
+    losses = []
+    for _ in range(40):
+        state, metrics = step(state, next(it))
+        losses.append(float(metrics["loss"]))
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.3, f"loss did not decrease: {first:.3f} -> {last:.3f}"
+
+
+def test_microbatch_equivalent_gradients():
+    """microbatch=2 accumulation == full-batch step (same params out)."""
+    cfg = reduced_config("olmo-1b")
+    api = build_model(cfg)
+    tc1 = TrainConfig(microbatch=1, loss_chunk=16)
+    tc2 = TrainConfig(microbatch=2, loss_chunk=16)
+    s1 = init_train_state(api, jax.random.PRNGKey(1), tc1)
+    s2 = init_train_state(api, jax.random.PRNGKey(1), tc2)
+    it = LMIterator(LMDataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8))
+    batch = next(it)
+    s1n, m1 = jax.jit(build_train_step(api, tc1))(s1, batch)
+    s2n, m2 = jax.jit(build_train_step(api, tc2))(s2, batch)
+    # microbatch MEAN of per-half losses == full-batch loss (equal halves)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=2e-3)
+    for a, b in zip(jax.tree.leaves(s1n.params), jax.tree.leaves(s2n.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-4)
+
+
+def test_grad_compression_error_feedback():
+    """EF property: quantisation error is carried, so the RUNNING SUM of
+    dequantised grads tracks the running sum of true grads."""
+    key = jax.random.PRNGKey(2)
+    grads = {"w": jax.random.normal(key, (64, 64))}
+    err = init_error_feedback(grads)
+    total_true = jnp.zeros((64, 64))
+    total_deq = jnp.zeros((64, 64))
+    for i in range(20):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(i), (64, 64))}
+        deq, err = compress_grads(g, err)
+        total_true += g["w"]
+        total_deq += deq["w"]
+    resid = err["w"]
+    np.testing.assert_allclose(
+        np.asarray(total_deq + resid), np.asarray(total_true), rtol=1e-4, atol=1e-4
+    )
+    # and a single quantisation round-trips within its scale
+    q, s = quantize_int8(grads["w"])
+    np.testing.assert_allclose(
+        np.asarray(dequantize_int8(q, s)), np.asarray(grads["w"]),
+        atol=float(s) * 0.51,
+    )
+
+
+def test_grad_compression_in_train_step():
+    cfg = reduced_config("olmo-1b")
+    api = build_model(cfg)
+    tc = TrainConfig(grad_compression="int8_ef", loss_chunk=16)
+    state = init_train_state(api, jax.random.PRNGKey(3), tc)
+    assert state.ef is not None
+    step = jax.jit(build_train_step(api, tc))
+    it = LMIterator(LMDataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4))
+    state, metrics = step(state, next(it))
+    assert jnp.isfinite(metrics["loss"])
+    ef_norm = sum(float(jnp.abs(e).sum()) for e in jax.tree.leaves(state.ef))
+    assert ef_norm > 0  # errors actually carried
+
+
+def test_lr_schedule_shape():
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(jnp.int32(s), tc)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= tc.learning_rate * (1 + 1e-6)  # warmup (f32 eps)
+    assert abs(lrs[10] - tc.learning_rate) / tc.learning_rate < 0.02
+    assert lrs[-1] < 0.2 * tc.learning_rate              # decayed
+    assert lrs[-1] >= 0.09 * tc.learning_rate            # floor 0.1x
+
+
+def test_adamw_weight_decay_shrinks():
+    tc = TrainConfig(learning_rate=1e-2, weight_decay=0.5, grad_clip=0)
+    params = {"w": jnp.ones((8, 8))}
+    opt = init_opt_state(params)
+    grads = {"w": jnp.zeros((8, 8))}
+    new, opt, _ = adamw_update(params, grads, opt, tc)
+    assert float(jnp.abs(new["w"]).max()) < 1.0  # pure decay shrinks
+
+
+def test_chunked_xent_matches_dense():
+    from repro.layers.embeddings import chunked_xent_loss
+    key = jax.random.PRNGKey(4)
+    b, s, d, v = 2, 12, 16, 40
+    h = jax.random.normal(key, (b, s, d))
+    w = jax.random.normal(jax.random.PRNGKey(5), (d, v))
+    labels = jax.random.randint(jax.random.PRNGKey(6), (b, s), 0, v)
+    labels = labels.at[:, -2:].set(-1)  # padding respected
+    chunked = chunked_xent_loss(w, h, labels, chunk=5)  # uneven chunk, padded
+    logits = (h @ w).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+    mask = labels >= 0
+    dense = jnp.sum((lse - gold) * mask) / jnp.sum(mask)
+    np.testing.assert_allclose(float(chunked), float(dense), rtol=1e-5)
