@@ -11,7 +11,8 @@ the table-specific payload, ';'-separated).
   schedule_compare   — dataflow (wavefront) vs layer-by-layer on the
                        paper's own cycle model — isolates the temporal-
                        parallelism win from platform effects
-  wavefront_throughput — single-device wavefront vs sequential wall time
+  engine_throughput  — every registered execution schedule through the
+                       unified Engine API: wall time + Eq-1 accounting
   roofline_cells     — §Roofline summary over experiments/dryrun artifacts
 """
 from __future__ import annotations
@@ -127,26 +128,39 @@ def schedule_compare() -> list[str]:
     return rows
 
 
-def wavefront_throughput() -> list[str]:
-    """Single-device wavefront vs layer-by-layer wall time (batched serve)."""
+def engine_throughput() -> list[str]:
+    """Every registered schedule through the unified Engine API: batched
+    scoring wall time + the schedule's own Eq-1 cycle accounting.  On a
+    single device "pipelined" resolves to its wavefront fallback (the
+    ``resolved=`` field records it)."""
     from repro.config import get_config
-    from repro.core import init_lstm_ae, lstm_ae_sequential, wavefront_forward
+    from repro.core import init_lstm_ae
+    from repro.engine import available_schedules, build_engine
 
+    t_len, batch = 64, 256
     rows = []
     for name in ("lstm-ae-f32-d6", "lstm-ae-f64-d6"):
         cfg = get_config(name)
         params = init_lstm_ae(jax.random.PRNGKey(0), cfg)
         f = cfg.lstm_ae.input_features
-        xs = jax.random.normal(jax.random.PRNGKey(1), (64, 256, f))  # T=64, B=256
-        seq = jax.jit(lambda p, x: lstm_ae_sequential(p, x))
-        wav = jax.jit(lambda p, x: wavefront_forward(p, x))
-        t_seq = _timeit(seq, params, xs, iters=10, warmup=2)
-        t_wav = _timeit(wav, params, xs, iters=10, warmup=2)
-        rows.append(
-            f"wavefront.{name},{t_wav:.1f},"
-            f"sequential_us={t_seq:.1f};wavefront_us={t_wav:.1f};"
-            f"ratio={t_seq / t_wav:.2f}"
-        )
+        series = jax.random.normal(jax.random.PRNGKey(1), (batch, t_len, f))
+        batch_d = {"series": series}
+        baseline_us = None
+        # sequential first so the other schedules can report speedup vs it
+        scheds = ["sequential"] + [s for s in available_schedules() if s != "sequential"]
+        for sched in scheds:
+            engine = build_engine(cfg, sched, params=params)
+            us = _timeit(engine.score, batch_d, iters=10, warmup=2)
+            if sched == "sequential":
+                baseline_us = us
+            est = engine.latency_model(t_len)
+            ratio = f";vs_sequential={baseline_us / us:.2f}" if (
+                baseline_us is not None and sched != "sequential") else ""
+            rows.append(
+                f"engine.{name}.{sched},{us:.1f},"
+                f"resolved={engine.schedule.resolved};eq1_cycles={est.cycles};"
+                f"eq1_ms={est.ms:.4f}{ratio}"
+            )
     return rows
 
 
@@ -177,7 +191,7 @@ def main() -> None:
         table2_latency,
         table3_energy,
         schedule_compare,
-        wavefront_throughput,
+        engine_throughput,
         roofline_cells,
     ):
         for row in fn():

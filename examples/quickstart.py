@@ -6,6 +6,10 @@
 3. Serve a mixed stream on the TEMPORAL-PARALLEL wavefront engine and
    report detection quality.
 
+The whole lifecycle runs through ``repro.engine.AnomalyService``; swap
+``schedule="wavefront"`` for ``"sequential"`` or ``"pipelined"`` to run
+the same model on a different execution schedule.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -13,43 +17,29 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
-import jax
-import jax.numpy as jnp
-
-from repro.config import TrainConfig, get_config
-from repro.core.anomaly import calibrate_threshold, evaluate_detection
+from repro.config import TrainConfig
 from repro.data import TimeseriesConfig, make_batch
-from repro.models import build_model
-from repro.training import build_train_step, init_train_state
+from repro.engine import AnomalyService
 
 
 def main():
-    model_cfg = get_config("lstm-ae-f32-d2")
-    api = build_model(model_cfg)
+    svc = AnomalyService("lstm-ae-f32-d2", schedule="wavefront")
     tc = TrainConfig(learning_rate=5e-3, warmup_steps=10, total_steps=150)
 
-    print(f"== training {model_cfg.name} on benign series ==")
-    state = init_train_state(api, jax.random.PRNGKey(0), tc)
-    step = jax.jit(build_train_step(api, tc))
+    print(f"== training {svc.cfg.name} on benign series ==")
     data_cfg = TimeseriesConfig(features=32, seq_len=32, batch=64, anomaly_rate=0.0)
-    for i in range(tc.total_steps):
-        series, _ = make_batch(data_cfg, i)
-        state, metrics = step(state, {"series": series})
-        if i % 25 == 0 or i == tc.total_steps - 1:
-            print(f"step {i:4d}  mse={float(metrics['loss']):.4f}")
+    svc.fit(data_cfg, steps=tc.total_steps, train_cfg=tc, log_every=25)
 
     print("== calibrating threshold on benign validation ==")
-    score = jax.jit(lambda p, b: api.prefill(p, b)[0])  # wavefront engine
     val, _ = make_batch(data_cfg, 10_000)
-    thr = calibrate_threshold(score(state.params, {"series": val}), k_sigma=3.0)
+    thr = svc.calibrate(val, k_sigma=3.0)
     print(f"threshold = {thr:.4f}")
 
     print("== serving a mixed stream (40% anomalous) ==")
     test_cfg = TimeseriesConfig(features=32, seq_len=32, batch=256,
                                 anomaly_rate=0.4, seed=123)
     series, labels = make_batch(test_cfg, 0)
-    errors = score(state.params, {"series": series})
-    report = evaluate_detection(errors, labels, thr)
+    report = svc.detect(series, labels)
     print(f"precision={report.precision:.3f} recall={report.recall:.3f} "
           f"f1={report.f1:.3f} auroc={report.auroc:.3f}")
     assert report.auroc > 0.8, "detection quality regression"

@@ -1,7 +1,12 @@
 """End-to-end serving driver (the paper's deployment scenario): a
-streaming anomaly-detection service scoring batched windows with the
-temporal-parallel engine, with latency accounting against the paper's
+streaming anomaly-detection service scoring batched windows through the
+unified execution engine, with latency accounting against the paper's
 Eq-1 model.
+
+The whole fit -> calibrate -> score lifecycle runs through
+``repro.engine.AnomalyService``; the execution schedule is a CLI knob
+(``--schedule sequential|wavefront|pipelined``), which is exactly the
+paper's sequential-vs-temporal-parallel comparison.
 
 Serves ``--batches`` batches of ``--batch`` sequences x ``--timesteps``
 steps, reports per-batch wall latency, throughput, detections, and the
@@ -18,19 +23,17 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import TrainConfig, get_config
-from repro.core.anomaly import calibrate_threshold
-from repro.core.latency import PAPER_RH_M, fpga_latency_ms
+from repro.core.latency import PAPER_RH_M
 from repro.data import TimeseriesConfig, make_batch
-from repro.models import build_model
-from repro.training import build_train_step, init_train_state
+from repro.engine import AnomalyService, available_schedules
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="lstm-ae-f32-d6")
+    ap.add_argument("--schedule", default="wavefront", choices=available_schedules())
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--timesteps", type=int, default=64)
     ap.add_argument("--batches", type=int, default=20)
@@ -38,39 +41,37 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    api = build_model(cfg)
+    svc = AnomalyService(cfg, schedule=args.schedule)
     feats = cfg.lstm_ae.input_features
 
-    # --- fit the detector quickly on benign data
-    tc = TrainConfig(learning_rate=5e-3, warmup_steps=10, total_steps=args.train_steps)
-    state = init_train_state(api, jax.random.PRNGKey(0), tc)
-    step = jax.jit(build_train_step(api, tc))
+    # --- fit the detector quickly on benign data (no-op at --train-steps 0:
+    # the service then scores with its randomly-initialised params)
     train_cfg = TimeseriesConfig(features=feats, seq_len=args.timesteps, batch=64)
-    for i in range(args.train_steps):
-        series, _ = make_batch(train_cfg, i)
-        state, m = step(state, {"series": series})
-    print(f"trained {args.arch}: final mse={float(m['loss']):.4f}")
-
-    score = jax.jit(lambda p, b: api.prefill(p, b)[0])
-    val, _ = make_batch(train_cfg, 99_999)
-    thr = calibrate_threshold(score(state.params, {"series": val}))
+    tc = TrainConfig(learning_rate=5e-3, warmup_steps=10,
+                     total_steps=max(1, args.train_steps))
+    metrics = svc.fit(train_cfg, args.train_steps, train_cfg=tc)
+    if metrics:
+        print(f"trained {args.arch}: final mse={metrics['mse']:.4f}")
+    else:
+        print(f"serving {args.arch} untrained (--train-steps 0)")
+    thr = svc.calibrate(train_cfg)
+    print(f"calibrated threshold={thr:.4f} [schedule={args.schedule}]")
 
     # --- stream
     stream_cfg = TimeseriesConfig(features=feats, seq_len=args.timesteps,
                                   batch=args.batch, anomaly_rate=0.05, seed=42)
     # warmup compile
     series, _ = make_batch(stream_cfg, 0)
-    jax.block_until_ready(score(state.params, {"series": series}))
+    jax.block_until_ready(svc.score(series))
 
     total_alerts = total_true = 0
     lat_ms = []
     for i in range(args.batches):
         series, labels = make_batch(stream_cfg, i)
         t0 = time.perf_counter()
-        errors = jax.block_until_ready(score(state.params, {"series": series}))
+        alerts = jax.block_until_ready(svc.alerts(series))
         lat_ms.append((time.perf_counter() - t0) * 1e3)
-        alerts = int((errors > thr).sum())
-        total_alerts += alerts
+        total_alerts += int(alerts.sum())
         total_true += int(labels.sum())
 
     lat_ms.sort()
@@ -81,12 +82,13 @@ def main():
           f"p50={p50:.2f}ms p99={p99:.2f}ms throughput={thpt:,.0f} steps/s")
     print(f"alerts={total_alerts} (true anomalous sequences={total_true})")
 
-    rh_m = PAPER_RH_M.get(args.arch)
-    if rh_m:
-        # the paper's accelerator pipelines one sequence at a time
-        acc = fpga_latency_ms(cfg.lstm_ae, args.timesteps, rh_m)
-        print(f"paper-model FPGA latency for one sequence (T={args.timesteps}): "
-              f"{acc.ms:.3f} ms ({acc.cycles} cycles @300MHz, Eq-1)")
+    # the paper's accelerator pipelines one sequence at a time; the engine
+    # knows its own Eq-1 accounting (dataflow vs sequential).  Calibrated
+    # reuse factors exist only for the paper's Table-1 archs.
+    if args.arch in PAPER_RH_M:
+        est = svc.latency_model(args.timesteps)
+        print(f"paper-model FPGA latency for one sequence (T={args.timesteps}, "
+              f"{est.schedule}): {est.ms:.3f} ms ({est.cycles} cycles @300MHz, Eq-1)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 smoke: the checks every PR must keep green.
+#   1. the full pytest suite
+#   2. the quickstart example (train -> calibrate -> detect via AnomalyService)
+#   3. the serving launcher on the reduced paper model
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+python examples/quickstart.py
+
+python -m repro.launch.serve --arch lstm-ae-f32-d2 \
+  --requests 3 --batch 4 --seq-len 16 --schedule wavefront
+
+echo "smoke OK"

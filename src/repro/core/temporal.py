@@ -147,6 +147,12 @@ def pipelined_forward(
     counts: (S,) layers per stage.  Stages beyond the model depth idle and
     pass activations through — utilisation is reported by the balancing
     module, mirroring the paper's Table-1 discussion.
+
+    Compilation caveat: do NOT trace :func:`build_stage_params` and this
+    function into one ``jax.jit`` program when the batch mesh axis is >1 —
+    on jax 0.4.37 the SPMD partitioner produces wrong stage weights for
+    that combined program.  Compile them separately (the engine's
+    "pipelined" schedule in engine/schedules.py does this).
     """
     n_stages = counts.shape[0]
     t_len, b, f = xs.shape

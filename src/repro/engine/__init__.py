@@ -1,0 +1,32 @@
+"""Unified execution-engine API (paper Section 3 as a pluggable subsystem).
+
+- schedules.py  registry of named temporal schedules (sequential | wavefront
+                | pipelined) + ``register_schedule`` for new backends
+- base.py       ``Engine``: score / reconstruct / stream / latency_model
+                over any registered schedule
+- service.py    ``AnomalyService``: fit -> calibrate -> score/detect/stream
+"""
+from repro.engine.base import Engine, EngineConfig, build_engine
+from repro.engine.schedules import (
+    ForwardFn,
+    Schedule,
+    available_schedules,
+    register_schedule,
+    resolve_forward,
+    resolve_schedule,
+)
+from repro.engine.service import AnomalyService, StreamSession
+
+__all__ = [
+    "AnomalyService",
+    "Engine",
+    "EngineConfig",
+    "ForwardFn",
+    "Schedule",
+    "StreamSession",
+    "available_schedules",
+    "build_engine",
+    "register_schedule",
+    "resolve_forward",
+    "resolve_schedule",
+]

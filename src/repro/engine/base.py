@@ -1,0 +1,194 @@
+"""The unified execution engine: one surface over every temporal schedule.
+
+An :class:`Engine` binds a model config (or :class:`~repro.models.api.ModelAPI`)
+plus parameters to a *named* execution schedule resolved from the registry in
+``engine/schedules.py``.  All consumers — serving, benchmarks, examples —
+talk to the same four methods regardless of which schedule executes:
+
+    engine = build_engine(cfg, "wavefront", params=params)
+    recon  = engine.reconstruct(batch)    # (B, T, F)
+    errors = engine.score(batch)          # (B,) per-sequence MSE
+    y, st  = engine.stream(x_t, st)       # one timestep, carried state
+    est    = engine.latency_model(T)      # Eq-1 accounting for this schedule
+
+Schedule choice is therefore a config knob (``EngineConfig.schedule`` or a
+plain string), which is what the paper's sequential-vs-temporal-parallel
+comparison needs and what future backends plug into.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import ModelConfig
+from repro.core.latency import PAPER_RH_M, LatencyEstimate, fpga_latency_ms
+from repro.engine.schedules import Schedule, resolve_schedule
+from repro.utils import Params
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Declarative engine selection — everything needed to resolve a schedule.
+
+    ``schedule``       registry name ("sequential" | "wavefront" | "pipelined" | ...)
+    ``pwl``            piecewise-linear activations (the paper's HLS numerics)
+    ``n_stages``       pipeline stages (pipelined; default: min(devices, depth))
+    ``data_parallel``  batch-shard ways on the data mesh axis (pipelined)
+    ``jit``            wrap the executor in jax.jit (disable for debugging)
+    """
+    schedule: str = "wavefront"
+    pwl: bool = False
+    n_stages: Optional[int] = None
+    data_parallel: int = 1
+    stage_axis: str = "model"
+    data_axis: str = "data"
+    jit: bool = True
+
+
+def _as_engine_cfg(schedule: Union[str, EngineConfig]) -> EngineConfig:
+    if isinstance(schedule, EngineConfig):
+        return schedule
+    return EngineConfig(schedule=schedule)
+
+
+class Engine:
+    """A model bound to one named temporal schedule.
+
+    Construct via :func:`build_engine`.  ``params`` may be bound at
+    construction, later via :meth:`bind`, or supplied per call through the
+    ``*_with`` variants (the form ModelAPI/serving steps use).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        engine_cfg: Union[str, EngineConfig] = "wavefront",
+        params: Optional[Params] = None,
+    ):
+        if cfg.family != "lstm_ae" or cfg.lstm_ae is None:
+            raise ValueError(
+                f"Engine executes the paper's lstm_ae family; got {cfg.family!r}"
+            )
+        self.cfg = cfg
+        self.engine_cfg = _as_engine_cfg(engine_cfg)
+        self.schedule: Schedule = resolve_schedule(
+            self.engine_cfg.schedule, cfg, self.engine_cfg
+        )
+        self.params = params
+        fwd = self.schedule.forward
+
+        # Whole-request programs (transpose + forward + reduction fused),
+        # jitted as one unit unless the schedule manages its own compilation
+        # (prejitted, e.g. pipelined — its shard_map programs must not be
+        # inlined into an enclosing jit; see schedules.py).
+        def _reconstruct(params, series):
+            xs = jnp.swapaxes(series, 0, 1)
+            return jnp.swapaxes(fwd(params, xs), 0, 1)
+
+        def _score(params, series):
+            xs = jnp.swapaxes(series, 0, 1)
+            recon = fwd(params, xs)
+            return jnp.mean(
+                jnp.square(recon.astype(jnp.float32) - xs.astype(jnp.float32)),
+                axis=(0, 2),
+            )
+
+        jit_here = self.engine_cfg.jit and not self.schedule.prejitted
+        self._reconstruct = jax.jit(_reconstruct) if jit_here else _reconstruct
+        self._score = jax.jit(_score) if jit_here else _score
+        step = self._stream_step
+        self._step = jax.jit(step) if self.engine_cfg.jit else step
+
+    # -- binding ----------------------------------------------------------
+
+    def bind(self, params: Params) -> "Engine":
+        """Bind parameters; returns self (compiled executors are reused)."""
+        self.params = params
+        return self
+
+    def _require_params(self) -> Params:
+        if self.params is None:
+            raise ValueError("engine has no bound params; call bind(params)")
+        return self.params
+
+    # -- batch surface ----------------------------------------------------
+
+    def reconstruct_with(self, params: Params, batch: dict) -> jnp.ndarray:
+        """batch {"series": (B, T, F)} -> reconstruction (B, T, F)."""
+        return self._reconstruct(params, batch["series"])
+
+    def score_with(self, params: Params, batch: dict) -> jnp.ndarray:
+        """batch {"series": (B, T, F)} -> per-sequence reconstruction MSE (B,)
+        — the anomaly score of the paper's application."""
+        return self._score(params, batch["series"])
+
+    def reconstruct(self, batch: dict) -> jnp.ndarray:
+        return self.reconstruct_with(self._require_params(), batch)
+
+    def score(self, batch: dict) -> jnp.ndarray:
+        return self.score_with(self._require_params(), batch)
+
+    # -- streaming surface ------------------------------------------------
+
+    def init_stream_state(self, batch: int, dtype=jnp.float32) -> Params:
+        """Zero (h, c) per layer for a streaming session of ``batch`` series."""
+        from repro.models.lstm_ae import init_stream_state
+
+        return init_stream_state(self.cfg, batch, dtype)
+
+    def _stream_step(self, params, x_t, state):
+        # One timestep through all layers.  A single timestep admits no
+        # temporal parallelism (Eq 1 with T=1), so streaming is schedule-
+        # independent: every schedule shares the ModelAPI decode cell loop.
+        from repro.models.lstm_ae import decode_step
+
+        return decode_step(params, x_t, state, None, self.cfg,
+                           pwl=self.engine_cfg.pwl)
+
+    def stream_with(
+        self, params: Params, x_t: jnp.ndarray, state: Params
+    ) -> tuple[jnp.ndarray, Params]:
+        """One streaming timestep x_t (B, F) -> (reconstruction (B, F), state)."""
+        return self._step(params, x_t, state)
+
+    def stream(self, x_t: jnp.ndarray, state: Params) -> tuple[jnp.ndarray, Params]:
+        return self.stream_with(self._require_params(), x_t, state)
+
+    # -- analytics --------------------------------------------------------
+
+    def latency_model(
+        self, timesteps: int, rh_m: Optional[int] = None, **kw
+    ) -> LatencyEstimate:
+        """Eq-1 accounting of THIS schedule on the paper's accelerator model.
+
+        ``rh_m`` defaults to the paper's Table-1 bottleneck reuse factor for
+        this architecture (1 when the arch is not a paper config).
+        """
+        if rh_m is None:
+            rh_m = PAPER_RH_M.get(self.cfg.name, 1)
+        return fpga_latency_ms(
+            self.cfg.lstm_ae, timesteps, rh_m,
+            schedule=self.schedule.latency_kind, **kw,
+        )
+
+    def __repr__(self) -> str:
+        return (f"Engine({self.cfg.name}, schedule={self.schedule.tag}, "
+                f"bound={self.params is not None})")
+
+
+def build_engine(
+    model: Union[ModelConfig, "object"],
+    schedule: Union[str, EngineConfig] = "wavefront",
+    params: Optional[Params] = None,
+) -> Engine:
+    """Build an :class:`Engine` from a ModelConfig or a ModelAPI.
+
+    ``schedule`` is a registry name or a full :class:`EngineConfig`.
+    """
+    cfg = getattr(model, "cfg", model)  # ModelAPI carries .cfg
+    if not isinstance(cfg, ModelConfig):
+        raise TypeError(f"expected ModelConfig or ModelAPI, got {type(model)!r}")
+    return Engine(cfg, schedule, params=params)

@@ -1,0 +1,196 @@
+"""Named execution schedules for the LSTM-AE (paper Section 3).
+
+The paper's contribution is a *schedule* — how the (layer x time) iteration
+grid of a recurrent stack is walked — not a new model.  This module turns
+each schedule into a first-class, registry-resolved object so every
+consumer (serving, benchmarks, examples) selects it by name:
+
+* ``"sequential"`` — layer-by-layer (the CPU/GPU baseline the paper
+  compares against): layer i runs over all timesteps before layer i+1.
+* ``"wavefront"``  — single-device temporal-parallel dataflow (§3.2): at
+  wavefront step k every layer fires concurrently on its own timestep.
+* ``"pipelined"``  — multi-device pipeline over a stage mesh axis with
+  ppermute FIFOs (§3.1's inter-module queues).  Stage grouping + mesh
+  construction are encapsulated here; on a single device it degenerates
+  to the wavefront schedule (same dataflow semantics, no stage axis).
+
+Third-party backends register with :func:`register_schedule`; see README
+§Execution engine for the contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.core import ModelConfig
+from repro.core.lstm import lstm_ae_sequential
+from repro.core.temporal import build_stage_params, pipelined_forward, wavefront_forward
+from repro.utils import Params
+
+if TYPE_CHECKING:
+    from repro.engine.base import EngineConfig
+
+# (params, xs (T, B, F)) -> reconstruction (T, B, F)
+ForwardFn = Callable[[Params, jnp.ndarray], jnp.ndarray]
+
+
+class Schedule(NamedTuple):
+    """A resolved schedule: the executor plus its Eq-1 accounting kind."""
+    name: str            # requested registry name
+    resolved: str        # actual executor after fallbacks (may differ)
+    latency_kind: str    # "dataflow" | "sequential" (core.latency Eq-1 mode)
+    forward: ForwardFn
+    # True when the factory already manages compilation internally (the
+    # Engine must NOT wrap forward in an outer jax.jit; see _pipelined)
+    prejitted: bool = False
+
+    @property
+    def tag(self) -> str:
+        """Display form: the requested name, plus the resolved executor
+        when a fallback rerouted it (e.g. ``pipelined->wavefront``)."""
+        return self.name if self.resolved == self.name else f"{self.name}->{self.resolved}"
+
+
+# name -> factory(cfg, engine_cfg) -> Schedule
+_SCHEDULES: dict[str, Callable[[ModelConfig, "EngineConfig"], Schedule]] = {}
+
+
+def register_schedule(name: str):
+    """Register a schedule factory under ``name`` (decorator).
+
+    The factory receives ``(model_cfg, engine_cfg)`` and returns a
+    :class:`Schedule` whose ``forward`` maps ``(params, xs (T,B,F))`` to the
+    reconstruction ``(T,B,F)``.  Registration is how new backends plug in.
+    """
+    def deco(factory):
+        _SCHEDULES[name] = factory
+        _resolve_cached.cache_clear()  # re-registration must not serve stale
+        return factory
+    return deco
+
+
+def available_schedules() -> list[str]:
+    return sorted(_SCHEDULES)
+
+
+@functools.lru_cache(maxsize=64)
+def _resolve_cached(name: str, cfg: ModelConfig, engine_cfg: "EngineConfig") -> Schedule:
+    return _SCHEDULES[name](cfg, engine_cfg)
+
+
+def resolve_schedule(name: str, cfg: ModelConfig, engine_cfg: "EngineConfig") -> Schedule:
+    """Look up ``name`` in the registry and build its executor.
+
+    Resolutions are cached per (name, cfg, engine_cfg): repeated calls —
+    e.g. ``ModelAPI.prefill`` resolving per request, or several Engines on
+    the same config — share one Schedule and hence one set of compiled
+    programs instead of rebuilding meshes and retracing every time."""
+    if name not in _SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {name!r}; available schedules: "
+            f"{', '.join(available_schedules())}"
+        )
+    return _resolve_cached(name, cfg, engine_cfg)
+
+
+def resolve_forward(
+    name: str, cfg: ModelConfig, *, pwl: bool = False, n_stages: Optional[int] = None
+) -> ForwardFn:
+    """Convenience: schedule name -> ForwardFn with a default EngineConfig
+    (used by ``models.lstm_ae.prefill`` so the ModelAPI delegates here)."""
+    from repro.engine.base import EngineConfig
+
+    ecfg = EngineConfig(schedule=name, pwl=pwl, n_stages=n_stages)
+    return resolve_schedule(name, cfg, ecfg).forward
+
+
+@register_schedule("sequential")
+def _sequential(cfg: ModelConfig, ecfg: "EngineConfig") -> Schedule:
+    def forward(params, xs):
+        return lstm_ae_sequential(params, xs, pwl=ecfg.pwl)
+
+    return Schedule("sequential", "sequential", "sequential", forward)
+
+
+@register_schedule("wavefront")
+def _wavefront(cfg: ModelConfig, ecfg: "EngineConfig") -> Schedule:
+    def forward(params, xs):
+        return wavefront_forward(params, xs, pwl=ecfg.pwl)
+
+    return Schedule("wavefront", "wavefront", "dataflow", forward)
+
+
+@register_schedule("pipelined")
+def _pipelined(cfg: ModelConfig, ecfg: "EngineConfig") -> Schedule:
+    if cfg.lstm_ae is None:
+        raise ValueError("pipelined schedule requires an lstm_ae config")
+    depth = len(cfg.lstm_ae.layer_sizes())
+    devices = jax.devices()
+    data_par = max(1, ecfg.data_parallel)
+    n_stages = ecfg.n_stages or min(len(devices) // data_par, depth)
+
+    if n_stages < 2:
+        if data_par > 1:
+            # the caller explicitly asked for batch sharding — degrading to
+            # an unsharded single-device run must not happen silently
+            raise ValueError(
+                f"pipelined schedule with data_parallel={data_par} needs at "
+                f"least {2 * data_par} devices (2 stages x {data_par}), "
+                f"have {len(devices)}"
+            )
+        # Single device (or a 1-stage request): the pipeline degenerates to
+        # the wavefront schedule — identical dataflow semantics, no stage
+        # axis.  Eq-1 accounting stays "dataflow".
+        wf = _wavefront(cfg, ecfg)
+        return Schedule("pipelined", "wavefront", "dataflow", wf.forward)
+
+    need = data_par * n_stages
+    if len(devices) < need:
+        raise ValueError(
+            f"pipelined schedule needs {need} devices "
+            f"({data_par} data x {n_stages} stages), have {len(devices)}"
+        )
+    mesh = jax.make_mesh(
+        (data_par, n_stages), (ecfg.data_axis, ecfg.stage_axis),
+        devices=devices[:need],
+    )
+
+    # Stage grouping (balanced DP over per-timestep FLOPs) is encapsulated
+    # here — callers never hand-build stage params or meshes.
+    #
+    # The two halves are compiled as SEPARATE programs on purpose: tracing
+    # build_stage_params and the shard_map into ONE jit miscompiles on
+    # jax 0.4.37 when the data mesh axis is >1 (the SPMD partitioner
+    # produces wrong wx/wh stage weights; verified by value comparison).
+    # Splitting the programs sidesteps the bug, so this Schedule is
+    # ``prejitted`` and the Engine must not re-wrap it.
+    def _build(params):
+        stage_params, counts, _ = build_stage_params(params, cfg, n_stages)
+        return stage_params, counts
+
+    def _run(stage_params, counts, xs):
+        return pipelined_forward(
+            stage_params, counts, xs, mesh=mesh, cfg=cfg,
+            stage_axis=ecfg.stage_axis, batch_axes=(ecfg.data_axis,),
+            pwl=ecfg.pwl,
+        )
+
+    build = jax.jit(_build) if ecfg.jit else _build
+    run = jax.jit(_run) if ecfg.jit else _run
+
+    def forward(params, xs):
+        if data_par > 1 and isinstance(xs, jax.core.Tracer):
+            raise RuntimeError(
+                "pipelined schedule with data_parallel>1 must not be traced "
+                "into an enclosing jax.jit: inlining re-merges the two "
+                "programs and hits the jax-0.4.37 shard_map miscompile "
+                "(see core/temporal.py). Call it un-jitted — Engine/"
+                "AnomalyService do this automatically."
+            )
+        stage_params, counts = build(params)
+        return run(stage_params, counts, xs)
+
+    return Schedule("pipelined", "pipelined", "dataflow", forward, prejitted=True)

@@ -1,8 +1,9 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>``.
 
 Two modes, per model family:
-- LSTM-AE: streaming anomaly-detection service on the temporal-parallel
-  wavefront engine (the paper's deployment).
+- LSTM-AE: anomaly-detection service (``repro.engine.AnomalyService``) on a
+  named execution schedule — ``--schedule sequential|wavefront|pipelined``
+  (wavefront is the paper's deployment).
 - LM families: batched prefill + greedy decode of a few tokens (reduced
   configs on CPU; full configs need a pod mesh).
 """
@@ -15,28 +16,44 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import get_config, list_archs, reduced_config
+from repro.core.latency import PAPER_RH_M
 from repro.data import TimeseriesConfig, make_batch
+from repro.engine import AnomalyService, available_schedules
 from repro.models import build_model
 from repro.serving import greedy_decode_loop
 
 
 def serve_lstm_ae(cfg, args) -> None:
-    api = build_model(cfg)
-    params = api.init(jax.random.PRNGKey(0))
-    score = jax.jit(lambda p, b: api.prefill(p, b)[0])
+    svc = AnomalyService(cfg, schedule=args.schedule)
     data_cfg = TimeseriesConfig(features=cfg.lstm_ae.input_features,
                                 seq_len=args.seq_len, batch=args.batch,
                                 anomaly_rate=0.05)
+    if args.train_steps:
+        fit_cfg = TimeseriesConfig(features=cfg.lstm_ae.input_features,
+                                   seq_len=args.seq_len, batch=64)
+        metrics = svc.fit(fit_cfg, args.train_steps)
+        svc.calibrate(fit_cfg)
+        print(f"[serve] fitted {cfg.name}: mse={metrics['mse']:.4f}, "
+              f"threshold={svc.threshold:.4f}")
+
     series, _ = make_batch(data_cfg, 0)
-    jax.block_until_ready(score(params, {"series": series}))  # compile
+    jax.block_until_ready(svc.score(series))  # compile
+    total_alerts = 0
     t0 = time.perf_counter()
     for i in range(args.requests):
         series, _ = make_batch(data_cfg, i)
-        jax.block_until_ready(score(params, {"series": series}))
+        errors = jax.block_until_ready(svc.score(series))
+        if svc.threshold is not None:
+            total_alerts += int((errors > svc.threshold).sum())
     dt = time.perf_counter() - t0
     steps = args.requests * args.batch * args.seq_len
-    print(f"[serve] {cfg.name}: {args.requests} requests, "
-          f"{dt/args.requests*1e3:.2f} ms/request, {steps/dt:,.0f} timesteps/s")
+    print(f"[serve] {cfg.name} [{svc.engine.schedule.tag}]: {args.requests} requests, "
+          f"{dt/args.requests*1e3:.2f} ms/request, {steps/dt:,.0f} timesteps/s"
+          + (f", alerts={total_alerts}" if svc.threshold is not None else ""))
+    if cfg.name in PAPER_RH_M:  # Eq-1 is calibrated only for Table-1 archs
+        est = svc.latency_model(args.seq_len)
+        print(f"[serve] Eq-1 model ({est.schedule}) for one sequence "
+              f"T={args.seq_len}: {est.ms:.3f} ms ({est.cycles} cycles)")
 
 
 def serve_lm(cfg, args) -> None:
@@ -78,6 +95,10 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--decode-tokens", type=int, default=16)
     ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--schedule", default="wavefront", choices=available_schedules(),
+                    help="LSTM-AE execution schedule (engine registry name)")
+    ap.add_argument("--train-steps", type=int, default=0,
+                    help="fit+calibrate the detector before serving (LSTM-AE)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()

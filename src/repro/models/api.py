@@ -86,6 +86,8 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             cache_specs=lambda: whisper_m.decode_cache_specs(cfg),
         )
     if cfg.family == "lstm_ae":
+        # prefill delegates to the execution-engine registry (repro.engine):
+        # pass schedule="sequential" | "wavefront" | "pipelined" through kw.
         return ModelAPI(
             cfg=cfg,
             init=lambda key: init_lstm_ae(key, cfg),

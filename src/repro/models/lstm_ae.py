@@ -1,9 +1,11 @@
 """Model-API wrapper for the paper's LSTM-AE family.
 
 Training uses the layer-by-layer schedule (gradient math is schedule-
-independent); serving uses the temporal-parallel wavefront — the paper's
-accelerator execution.  Streaming decode carries per-layer (h, c) state,
-one timestep through all layers per call.
+independent); serving delegates to the execution-engine registry
+(``repro.engine``), so any named schedule — "sequential", "wavefront"
+(default; the paper's accelerator execution), "pipelined" — can run the
+same model.  Streaming decode carries per-layer (h, c) state, one timestep
+through all layers per call.
 """
 from __future__ import annotations
 
@@ -17,7 +19,6 @@ from repro.core.lstm import (
     lstm_cell,
     lstm_ae_sequential,
 )
-from repro.core.temporal import wavefront_forward
 from repro.utils import Params
 
 
@@ -29,11 +30,18 @@ def train_loss(params: Params, batch: dict, cfg: ModelConfig, **_) -> tuple[jnp.
     return err, {"mse": err}
 
 
-def prefill(params: Params, batch: dict, cfg: ModelConfig, **_) -> tuple[jnp.ndarray, Params]:
-    """Serve a batch of sequences on the wavefront engine; returns
-    per-sequence reconstruction errors (the anomaly scores)."""
+def prefill(
+    params: Params, batch: dict, cfg: ModelConfig, schedule: str = "wavefront", **_
+) -> tuple[jnp.ndarray, Params]:
+    """Serve a batch of sequences on the named execution schedule (resolved
+    from the engine registry); returns per-sequence reconstruction errors
+    (the anomaly scores)."""
+    # lazy import: repro.engine.service imports repro.models at module scope
+    from repro.engine.schedules import resolve_forward
+
+    forward = resolve_forward(schedule, cfg)
     xs = jnp.swapaxes(batch["series"], 0, 1)
-    recon = wavefront_forward(params, xs)
+    recon = forward(params, xs)
     err = jnp.mean(jnp.square(recon.astype(jnp.float32) - xs.astype(jnp.float32)), axis=(0, 2))
     return err, {}
 
@@ -47,13 +55,16 @@ def init_stream_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params
 
 
 def decode_step(params: Params, x_t: jnp.ndarray, state: Params,
-                cache_len: jnp.ndarray, cfg: ModelConfig) -> tuple[jnp.ndarray, Params]:
-    """One streaming timestep x_t (B, F) through all layers."""
+                cache_len: jnp.ndarray, cfg: ModelConfig,
+                pwl: bool = False) -> tuple[jnp.ndarray, Params]:
+    """One streaming timestep x_t (B, F) through all layers.  A single
+    timestep admits no temporal parallelism (Eq 1 with T=1), so this one
+    cell loop serves every schedule — ``Engine.stream`` delegates here."""
     del cache_len
     hs, cs = [], []
     cur = x_t
     for layer, h, c in zip(params["layers"], state["h"], state["c"]):
-        h_new, c_new = lstm_cell(layer, cur, h, c)
+        h_new, c_new = lstm_cell(layer, cur, h, c, pwl=pwl)
         hs.append(h_new)
         cs.append(c_new)
         cur = h_new

@@ -1,3 +1,13 @@
-from repro.serving.step import build_decode_step, build_prefill_step, greedy_decode_loop
+from repro.serving.step import (
+    build_decode_step,
+    build_prefill_step,
+    build_score_step,
+    greedy_decode_loop,
+)
 
-__all__ = ["build_decode_step", "build_prefill_step", "greedy_decode_loop"]
+__all__ = [
+    "build_decode_step",
+    "build_prefill_step",
+    "build_score_step",
+    "greedy_decode_loop",
+]

@@ -21,6 +21,17 @@ def build_prefill_step(api: ModelAPI, mesh=None, rules: Optional[ShardingRules] 
     return prefill_step
 
 
+def build_score_step(engine, mesh=None, rules: Optional[ShardingRules] = None):
+    """Anomaly-scoring step over a :class:`repro.engine.Engine` — the
+    LSTM-AE serving path.  The engine owns the execution schedule (and, for
+    "pipelined", its own mesh); ``mesh`` here only supplies sharding rules
+    for any enclosing context."""
+    def score_step(params, batch):
+        with mesh_context(mesh, rules or (rules_for_mesh(mesh) if mesh else None)):
+            return engine.score_with(params, batch)
+    return score_step
+
+
 def build_decode_step(api: ModelAPI, mesh=None, rules: Optional[ShardingRules] = None):
     def decode_step(params, token, cache, cache_len):
         with mesh_context(mesh, rules or (rules_for_mesh(mesh) if mesh else None)):

@@ -1,0 +1,92 @@
+"""Fallback shim for the ``hypothesis`` property-testing library.
+
+The container image does not ship ``hypothesis``; importing it at module
+scope used to crash pytest collection (the seed failure).  When the real
+library is available we re-export it unchanged; otherwise a minimal
+deterministic stand-in runs each ``@given`` test on ``max_examples``
+pseudo-random draws (seeded, so failures reproduce).  Only the strategy
+surface the test-suite uses is implemented: ``sampled_from``, ``integers``,
+``floats``, ``booleans``, ``lists``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    import functools
+    import inspect
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", None) or getattr(
+                    fn, "_max_examples", 20
+                )
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # pytest must only see the NON-strategy parameters (fixtures);
+            # functools.wraps leaks the full signature via __wrapped__.
+            del wrapper.__wrapped__
+            params = [
+                p for name, p in inspect.signature(fn).parameters.items()
+                if name not in strategies
+            ]
+            wrapper.__signature__ = inspect.Signature(params)
+            return wrapper
+
+        return deco
+
+
+strategies = st
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st", "strategies"]

@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback shim
 
 from repro.config import get_config
 from repro.config.core import LSTMAEConfig

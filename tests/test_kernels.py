@@ -56,9 +56,12 @@ def test_lstm_cell_kernel_block_invariance():
         lstm_cell_op(p, x, h, c, block_b=bb, block_h=bh, interpret=True)
         for bb, bh in [(32, 128), (16, 64), (8, 32), (32, 32)]
     ]
+    # block_h never splits the contraction (always full In/H), but different
+    # output tile widths change XLA's reduction vectorisation, so results
+    # drift by float noise — same tolerance as the kernel-vs-reference tests.
     for hk, ck in outs[1:]:
-        np.testing.assert_allclose(np.asarray(hk), np.asarray(outs[0][0]), rtol=1e-6)
-        np.testing.assert_allclose(np.asarray(ck), np.asarray(outs[0][1]), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(outs[0][0]), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ck), np.asarray(outs[0][1]), rtol=1e-5, atol=1e-6)
 
 
 @pytest.mark.parametrize("t_len,b,in_dim,hidden", [(4, 4, 16, 16), (12, 8, 32, 64),
