@@ -13,10 +13,18 @@ the table-specific payload, ';'-separated).
                        parallelism win from platform effects
   engine_throughput  — every registered execution schedule through the
                        unified Engine API: wall time + Eq-1 accounting
+  gateway_throughput — pooled streaming through repro.gateway vs the
+                       one-stream-per-call baseline: stream-steps/sec per
+                       pool size and schedule (``--json`` writes the rows
+                       to a BENCH_gateway.json-style file for trending)
   roofline_cells     — §Roofline summary over experiments/dryrun artifacts
+
+``--tables`` selects a subset; ``--json PATH`` additionally dumps the
+selected rows as a JSON list of {name, us_per_call, derived} objects.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import statistics
 import time
@@ -164,6 +172,86 @@ def engine_throughput() -> list[str]:
     return rows
 
 
+def gateway_throughput() -> list[str]:
+    """Two serving paths through repro.gateway vs their one-request-per-call
+    baselines:
+
+    ``gateway.stream.*`` — pooled streaming (one compiled masked step over
+    the whole slot block) vs a B=1 ``AnomalyService.stream_step`` dispatch
+    per stream per step, swept over pool sizes.  Streaming is schedule-
+    independent (every schedule shares the decode cell loop), so this
+    sweep runs once.  Acceptance bar: speedup > 2x at pool size 32 on CPU.
+
+    ``gateway.score.*`` — micro-batched one-shot scoring (shape-bucketed,
+    padded, via ``Engine.score_masked``) vs one B=1 ``score`` dispatch per
+    request, per registered schedule (the forward IS schedule-dependent).
+    """
+    import numpy as np
+
+    from repro.engine import AnomalyService, available_schedules
+
+    arch = "lstm-ae-f32-d2"
+    rounds, pool_sizes = 32, (1, 8, 32)
+    feats = 32
+    rows = []
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((rounds, max(pool_sizes), feats)).astype(np.float32)
+    svc = AnomalyService(arch, schedule="wavefront")
+
+    def solo_sps(n: int) -> float:
+        sessions = [svc.stream_start(1) for _ in range(n)]
+        for j in range(n):  # warmup/compile
+            svc.stream_step(jnp.asarray(xs[0, j][None]), sessions[j])
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            for j in range(n):
+                errs, sessions[j] = svc.stream_step(
+                    jnp.asarray(xs[r, j][None]), sessions[j])
+        jax.block_until_ready(errs)
+        return n * rounds / (time.perf_counter() - t0)
+
+    for n in pool_sizes:
+        solo = solo_sps(n)
+        gw = svc.open_gateway(capacity=n, max_batch=n)
+        ids = list(range(n))
+        for sid in ids:
+            gw.admit(sid)
+        gw.step({sid: xs[0, i] for i, sid in enumerate(ids)})  # compile
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            gw.step({sid: xs[r, i] for i, sid in enumerate(ids)})
+        dt = time.perf_counter() - t0
+        pooled = n * rounds / dt
+        rows.append(
+            f"gateway.stream.{arch}.pool{n},{dt / rounds * 1e6:.1f},"
+            f"pooled_sps={pooled:.0f};solo_sps={solo:.0f};"
+            f"speedup={pooled / solo:.2f}x;"
+            f"step_fill={gw.stats()['gauges'].get('pool.step_fill', 0.0):.2f}"
+        )
+
+    t_len, n_req, max_batch = 32, 64, 16
+    windows = rng.standard_normal((n_req, t_len, feats)).astype(np.float32)
+    for sched in available_schedules():
+        s = AnomalyService(arch, schedule=sched)
+        gw = s.open_gateway(capacity=1, max_batch=max_batch)
+        gw.score(list(windows[:max_batch]))  # compile the bucket
+        t0 = time.perf_counter()
+        gw.score(list(windows))
+        batched_rps = n_req / (time.perf_counter() - t0)
+        jax.block_until_ready(s.score(jnp.asarray(windows[:1])))  # compile B=1
+        t0 = time.perf_counter()
+        for i in range(n_req):
+            jax.block_until_ready(s.score(jnp.asarray(windows[i:i + 1])))
+        solo_rps = n_req / (time.perf_counter() - t0)
+        rows.append(
+            f"gateway.score.{arch}.{sched},{1e6 / batched_rps:.1f},"
+            f"batched_rps={batched_rps:.0f};solo_rps={solo_rps:.0f};"
+            f"speedup={batched_rps / solo_rps:.2f}x;"
+            f"fill={gw.stats()['batch_fill_ratio']:.2f}"
+        )
+    return rows
+
+
 def roofline_cells(dryrun_dir: str = "experiments/dryrun") -> list[str]:
     rows = []
     d = Path(dryrun_dir)
@@ -184,18 +272,40 @@ def roofline_cells(dryrun_dir: str = "experiments/dryrun") -> list[str]:
     return rows
 
 
+_TABLES = {
+    "table1_resources": table1_resources,
+    "table2_latency": table2_latency,
+    "table3_energy": table3_energy,
+    "schedule_compare": schedule_compare,
+    "engine_throughput": engine_throughput,
+    "gateway_throughput": gateway_throughput,
+    "roofline_cells": roofline_cells,
+}
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", nargs="*", choices=sorted(_TABLES),
+                    help="subset of tables to run (default: all)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as JSON (e.g. BENCH_gateway.json)")
+    args = ap.parse_args()
+
+    names = args.tables or list(_TABLES)
     print("name,us_per_call,derived")
-    for fn in (
-        table1_resources,
-        table2_latency,
-        table3_energy,
-        schedule_compare,
-        engine_throughput,
-        roofline_cells,
-    ):
-        for row in fn():
+    all_rows: list[str] = []
+    for name in names:
+        for row in _TABLES[name]():
             print(row, flush=True)
+            all_rows.append(row)
+
+    if args.json:
+        records = []
+        for row in all_rows:
+            name, us, derived = row.split(",", 2)
+            records.append({"name": name, "us_per_call": float(us), "derived": derived})
+        Path(args.json).write_text(json.dumps(records, indent=2) + "\n")
+        print(f"# wrote {len(records)} rows to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

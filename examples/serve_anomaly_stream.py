@@ -1,17 +1,21 @@
-"""End-to-end serving driver (the paper's deployment scenario): a
-streaming anomaly-detection service scoring batched windows through the
-unified execution engine, with latency accounting against the paper's
-Eq-1 model.
+"""End-to-end serving driver (the paper's deployment scenario): the
+streaming anomaly gateway serving many concurrent streams and micro-batched
+one-shot scoring requests over the unified execution engine, with latency
+accounting against the paper's Eq-1 model.
 
-The whole fit -> calibrate -> score lifecycle runs through
-``repro.engine.AnomalyService``; the execution schedule is a CLI knob
-(``--schedule sequential|wavefront|pipelined``), which is exactly the
-paper's sequential-vs-temporal-parallel comparison.
+The fit -> calibrate lifecycle runs through ``repro.engine.AnomalyService``;
+serving then goes through ``repro.gateway.AnomalyGateway``:
 
-Serves ``--batches`` batches of ``--batch`` sequences x ``--timesteps``
-steps, reports per-batch wall latency, throughput, detections, and the
-calibrated-FPGA-model latency for the same workload (what the accelerator
-of the paper would do).
+* one-shot windows are submitted individually and coalesced by the
+  shape-bucketed micro-batcher (``--max-batch`` / ``--max-wait-ms``) — the
+  software analogue of the paper's inter-module FIFOs keeping the datapath
+  fed;
+* a ``--capacity``-slot session pool streams per-timestep samples for more
+  logical streams than slots (admit/evict churn, one compiled masked step).
+
+The execution schedule stays a CLI knob (``--schedule
+sequential|wavefront|pipelined|fused``) — the paper's
+sequential-vs-temporal-parallel comparison.
 
 Run:  PYTHONPATH=src python examples/serve_anomaly_stream.py
 """
@@ -22,7 +26,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
-import jax
+import numpy as np
 
 from repro.config import TrainConfig, get_config
 from repro.core.latency import PAPER_RH_M
@@ -38,6 +42,11 @@ def main():
     ap.add_argument("--timesteps", type=int, default=64)
     ap.add_argument("--batches", type=int, default=20)
     ap.add_argument("--train-steps", type=int, default=80)
+    ap.add_argument("--capacity", type=int, default=32,
+                    help="gateway session-pool slots")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="gateway micro-batch flush size")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -57,30 +66,51 @@ def main():
     thr = svc.calibrate(train_cfg)
     print(f"calibrated threshold={thr:.4f} [schedule={args.schedule}]")
 
-    # --- stream
+    # --- open the gateway: all serving below goes through it
+    gw = svc.open_gateway(capacity=args.capacity, max_batch=args.max_batch,
+                          max_wait_ms=args.max_wait_ms,
+                          max_queue=max(1024, 2 * args.batch))
+
+    # --- one-shot scoring: each window submitted individually, the
+    # micro-batcher coalesces them into padded bucket-shaped batches
     stream_cfg = TimeseriesConfig(features=feats, seq_len=args.timesteps,
                                   batch=args.batch, anomaly_rate=0.05, seed=42)
-    # warmup compile
     series, _ = make_batch(stream_cfg, 0)
-    jax.block_until_ready(svc.score(series))
+    gw.score(list(np.asarray(series)[:4]))  # warmup compile of the bucket
 
     total_alerts = total_true = 0
-    lat_ms = []
+    t0 = time.perf_counter()
     for i in range(args.batches):
         series, labels = make_batch(stream_cfg, i)
-        t0 = time.perf_counter()
-        alerts = jax.block_until_ready(svc.alerts(series))
-        lat_ms.append((time.perf_counter() - t0) * 1e3)
-        total_alerts += int(alerts.sum())
+        scores = gw.score(list(np.asarray(series)))
+        total_alerts += int((scores > thr).sum())
         total_true += int(labels.sum())
-
-    lat_ms.sort()
-    p50 = lat_ms[len(lat_ms) // 2]
-    p99 = lat_ms[int(len(lat_ms) * 0.99)]
-    thpt = args.batch * args.timesteps / (p50 / 1e3)
-    print(f"served {args.batches} batches of {args.batch}x{args.timesteps}: "
-          f"p50={p50:.2f}ms p99={p99:.2f}ms throughput={thpt:,.0f} steps/s")
+    dt = time.perf_counter() - t0
+    s = gw.stats()
+    n_req = args.batches * args.batch
+    print(f"served {n_req} one-shot requests in {dt:.2f}s "
+          f"({n_req/dt:,.0f} req/s, {n_req*args.timesteps/dt:,.0f} steps/s): "
+          f"p50={s['latency_ms']['p50']:.2f}ms p95={s['latency_ms']['p95']:.2f}ms "
+          f"fill={s['batch_fill_ratio']:.2f}")
     print(f"alerts={total_alerts} (true anomalous sequences={total_true})")
+
+    # --- pooled streaming: 2x capacity logical streams share the slots
+    from repro.gateway import drive_stream_churn
+
+    n_streams = 2 * args.capacity
+    pool_cfg = TimeseriesConfig(features=feats, seq_len=args.timesteps,
+                                batch=n_streams, anomaly_rate=0.05, seed=43)
+    xs = np.asarray(make_batch(pool_cfg, 0)[0])
+    steps_before = gw.stats()["counters"].get("pool.stream_steps", 0)
+    t0 = time.perf_counter()
+    finals, unserved = drive_stream_churn(gw, xs)
+    dt = time.perf_counter() - t0
+    stream_alerts = sum(1 for e in finals.values() if e > thr)
+    stepped = int(gw.stats()["counters"]["pool.stream_steps"] - steps_before)
+    print(f"streamed {len(finals)}/{n_streams} logical streams over "
+          f"{args.capacity} slots in {dt*1e3:.0f}ms "
+          f"({stepped/dt:,.0f} stream-steps/s), stream alerts={stream_alerts}"
+          + (f", {len(unserved)} still waiting at end" if unserved else ""))
 
     # the paper's accelerator pipelines one sequence at a time; the engine
     # knows its own Eq-1 accounting (dataflow vs sequential).  Calibrated

@@ -3,6 +3,7 @@
 #   1. the full pytest suite
 #   2. the quickstart example (train -> calibrate -> detect via AnomalyService)
 #   3. the serving launcher on the reduced paper model
+#   4. the streaming gateway (session pool + micro-batched queue)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -13,5 +14,8 @@ python examples/quickstart.py
 
 python -m repro.launch.serve --arch lstm-ae-f32-d2 \
   --requests 3 --batch 4 --seq-len 16 --schedule wavefront
+
+python -m repro.launch.serve --arch lstm-ae-f32-d2 --gateway --train-steps 0 \
+  --capacity 8 --max-batch 8 --seq-len 24 --requests 20
 
 echo "smoke OK"

@@ -1,10 +1,12 @@
 """Unified execution-engine API (paper Section 3 as a pluggable subsystem).
 
 - schedules.py  registry of named temporal schedules (sequential | wavefront
-                | pipelined) + ``register_schedule`` for new backends
+                | pipelined | fused) + ``register_schedule`` for new backends
 - base.py       ``Engine``: score / reconstruct / stream / latency_model
-                over any registered schedule
+                over any registered schedule (plus masked stream/score
+                primitives for the gateway)
 - service.py    ``AnomalyService``: fit -> calibrate -> score/detect/stream
+                -> ``open_gateway`` (repro.gateway serving layer)
 """
 from repro.engine.base import Engine, EngineConfig, build_engine
 from repro.engine.schedules import (
@@ -14,6 +16,8 @@ from repro.engine.schedules import (
     register_schedule,
     resolve_forward,
     resolve_schedule,
+    schedule_cache_info,
+    unregister_schedule,
 )
 from repro.engine.service import AnomalyService, StreamSession
 
@@ -29,4 +33,6 @@ __all__ = [
     "register_schedule",
     "resolve_forward",
     "resolve_schedule",
+    "schedule_cache_info",
+    "unregister_schedule",
 ]

@@ -96,11 +96,29 @@ class Engine:
                 axis=(0, 2),
             )
 
+        def _score_masked(params, series, lengths):
+            # Per-sequence MSE over each row's valid prefix only.  The LSTM
+            # stack is causal, so zero-padding rows out to a common T does
+            # not perturb the valid timesteps — the contract the gateway's
+            # shape-bucketed micro-batching relies on.
+            xs = jnp.swapaxes(series, 0, 1)                       # (T, B, F)
+            recon = fwd(params, xs)
+            sq = jnp.mean(
+                jnp.square(recon.astype(jnp.float32) - xs.astype(jnp.float32)),
+                axis=2,
+            )                                                     # (T, B)
+            valid = jnp.arange(sq.shape[0])[:, None] < lengths[None, :]
+            denom = jnp.maximum(lengths, 1).astype(jnp.float32)
+            return jnp.sum(jnp.where(valid, sq, 0.0), axis=0) / denom
+
         jit_here = self.engine_cfg.jit and not self.schedule.prejitted
         self._reconstruct = jax.jit(_reconstruct) if jit_here else _reconstruct
         self._score = jax.jit(_score) if jit_here else _score
+        self._score_masked = jax.jit(_score_masked) if jit_here else _score_masked
         step = self._stream_step
         self._step = jax.jit(step) if self.engine_cfg.jit else step
+        mstep = self._masked_stream_step
+        self._mstep = jax.jit(mstep) if self.engine_cfg.jit else mstep
 
     # -- binding ----------------------------------------------------------
 
@@ -125,11 +143,22 @@ class Engine:
         — the anomaly score of the paper's application."""
         return self._score(params, batch["series"])
 
+    def score_masked_with(self, params: Params, batch: dict) -> jnp.ndarray:
+        """batch {"series": (B, T, F), "lengths": (B,) int} -> per-sequence
+        MSE over each row's first ``lengths[i]`` timesteps.  Rows padded
+        beyond their length (and all-padding rows) do not contaminate
+        scores — the micro-batching gateway's bucketed-scoring primitive."""
+        lengths = jnp.asarray(batch["lengths"], jnp.int32)
+        return self._score_masked(params, batch["series"], lengths)
+
     def reconstruct(self, batch: dict) -> jnp.ndarray:
         return self.reconstruct_with(self._require_params(), batch)
 
     def score(self, batch: dict) -> jnp.ndarray:
         return self.score_with(self._require_params(), batch)
+
+    def score_masked(self, batch: dict) -> jnp.ndarray:
+        return self.score_masked_with(self._require_params(), batch)
 
     # -- streaming surface ------------------------------------------------
 
@@ -148,6 +177,17 @@ class Engine:
         return decode_step(params, x_t, state, None, self.cfg,
                            pwl=self.engine_cfg.pwl)
 
+    def _masked_stream_step(self, params, x_t, state, mask):
+        # Pooled-session streaming: advance only the rows ``mask`` selects.
+        # Rows are independent through the cell (batched matmuls), so masked
+        # stepping is value-identical to stepping each selected row alone.
+        y_t, new_state = self._stream_step(params, x_t, state)
+        keep = mask[:, None]
+        merged = jax.tree.map(
+            lambda new, old: jnp.where(keep, new, old), new_state, state
+        )
+        return y_t, merged
+
     def stream_with(
         self, params: Params, x_t: jnp.ndarray, state: Params
     ) -> tuple[jnp.ndarray, Params]:
@@ -156,6 +196,20 @@ class Engine:
 
     def stream(self, x_t: jnp.ndarray, state: Params) -> tuple[jnp.ndarray, Params]:
         return self.stream_with(self._require_params(), x_t, state)
+
+    def stream_masked_with(
+        self, params: Params, x_t: jnp.ndarray, state: Params, mask: jnp.ndarray
+    ) -> tuple[jnp.ndarray, Params]:
+        """Pooled step: x_t (B, F), mask (B,) bool -> (y_t (B, F), state)
+        where only masked rows' (h, c) advance (others carry unchanged).
+        The gateway session pool runs thousands of logical streams through
+        this one compiled program — slot churn never retraces."""
+        return self._mstep(params, x_t, state, mask)
+
+    def stream_masked(
+        self, x_t: jnp.ndarray, state: Params, mask: jnp.ndarray
+    ) -> tuple[jnp.ndarray, Params]:
+        return self.stream_masked_with(self._require_params(), x_t, state, mask)
 
     # -- analytics --------------------------------------------------------
 

@@ -13,13 +13,17 @@ consumer (serving, benchmarks, examples) selects it by name:
   ppermute FIFOs (§3.1's inter-module queues).  Stage grouping + mesh
   construction are encapsulated here; on a single device it degenerates
   to the wavefront schedule (same dataflow semantics, no stage axis).
+* ``"fused"``      — the Pallas fused-cell kernel (kernels/lstm_cell.py:
+  MVM_X + MVM_H + gates + element-wise as one MXU kernel) scanned over the
+  (layer, time) grid; interpret-mode fallback off-TPU.
 
 Third-party backends register with :func:`register_schedule`; see README
 §Execution engine for the contract.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
+from collections import OrderedDict
 from typing import Callable, NamedTuple, Optional, TYPE_CHECKING
 
 import jax
@@ -56,44 +60,94 @@ class Schedule(NamedTuple):
 
 # name -> factory(cfg, engine_cfg) -> Schedule
 _SCHEDULES: dict[str, Callable[[ModelConfig, "EngineConfig"], Schedule]] = {}
+# name -> EngineConfig field names the factory actually reads (None = all).
+# Used to canonicalise the cache key so configs differing only in fields a
+# schedule ignores share one Schedule (and one set of compiled programs).
+_SCHEDULE_FIELDS: dict[str, Optional[tuple[str, ...]]] = {}
+
+# Resolve cache: explicit LRU so compiled executors (and, for "pipelined",
+# their meshes) cannot accumulate without bound when callers resolve many
+# distinct EngineConfigs.  Keys are canonicalised (see _canonical_cfg).
+SCHEDULE_CACHE_CAPACITY = 32
+_RESOLVE_CACHE: "OrderedDict[tuple, Schedule]" = OrderedDict()
 
 
-def register_schedule(name: str):
+def register_schedule(name: str, *, config_fields: Optional[tuple[str, ...]] = None):
     """Register a schedule factory under ``name`` (decorator).
 
     The factory receives ``(model_cfg, engine_cfg)`` and returns a
     :class:`Schedule` whose ``forward`` maps ``(params, xs (T,B,F))`` to the
     reconstruction ``(T,B,F)``.  Registration is how new backends plug in.
+
+    ``config_fields`` optionally names the :class:`EngineConfig` fields the
+    factory reads (e.g. ``("pwl",)``); resolutions then cache on those
+    fields only, so EngineConfigs differing in irrelevant knobs share one
+    compiled executor.  Omit it (the safe default) to key on every field.
     """
     def deco(factory):
         _SCHEDULES[name] = factory
-        _resolve_cached.cache_clear()  # re-registration must not serve stale
+        _SCHEDULE_FIELDS[name] = config_fields
+        _RESOLVE_CACHE.clear()  # re-registration must not serve stale
         return factory
     return deco
+
+
+def unregister_schedule(name: str) -> None:
+    """Remove a registered schedule and drop its cached resolutions."""
+    _SCHEDULES.pop(name, None)
+    _SCHEDULE_FIELDS.pop(name, None)
+    _RESOLVE_CACHE.clear()
 
 
 def available_schedules() -> list[str]:
     return sorted(_SCHEDULES)
 
 
-@functools.lru_cache(maxsize=64)
-def _resolve_cached(name: str, cfg: ModelConfig, engine_cfg: "EngineConfig") -> Schedule:
-    return _SCHEDULES[name](cfg, engine_cfg)
+def schedule_cache_info() -> dict:
+    """Resolve-cache occupancy — regression surface for the LRU cap."""
+    return {"size": len(_RESOLVE_CACHE), "capacity": SCHEDULE_CACHE_CAPACITY}
+
+
+def _canonical_cfg(name: str, engine_cfg: "EngineConfig") -> "EngineConfig":
+    """Project ``engine_cfg`` onto the fields schedule ``name`` declares it
+    reads; everything else is reset to the EngineConfig default so it cannot
+    split the cache key."""
+    fields = _SCHEDULE_FIELDS.get(name)
+    if fields is None:
+        return dataclasses.replace(engine_cfg, schedule=name)
+    from repro.engine.base import EngineConfig
+
+    return dataclasses.replace(
+        EngineConfig(schedule=name),
+        **{f: getattr(engine_cfg, f) for f in fields},
+    )
 
 
 def resolve_schedule(name: str, cfg: ModelConfig, engine_cfg: "EngineConfig") -> Schedule:
     """Look up ``name`` in the registry and build its executor.
 
-    Resolutions are cached per (name, cfg, engine_cfg): repeated calls —
-    e.g. ``ModelAPI.prefill`` resolving per request, or several Engines on
-    the same config — share one Schedule and hence one set of compiled
-    programs instead of rebuilding meshes and retracing every time."""
+    Resolutions are cached per (name, cfg, canonicalised engine_cfg):
+    repeated calls — e.g. ``ModelAPI.prefill`` resolving per request, or
+    several Engines on the same config — share one Schedule and hence one
+    set of compiled programs instead of rebuilding meshes and retracing
+    every time.  The cache is a capped LRU (``SCHEDULE_CACHE_CAPACITY``)
+    so many distinct configs cannot leak compiled meshes."""
     if name not in _SCHEDULES:
         raise ValueError(
             f"unknown schedule {name!r}; available schedules: "
             f"{', '.join(available_schedules())}"
         )
-    return _resolve_cached(name, cfg, engine_cfg)
+    canon = _canonical_cfg(name, engine_cfg)
+    key = (name, cfg, canon)
+    sched = _RESOLVE_CACHE.get(key)
+    if sched is None:
+        sched = _SCHEDULES[name](cfg, canon)
+        _RESOLVE_CACHE[key] = sched
+        while len(_RESOLVE_CACHE) > SCHEDULE_CACHE_CAPACITY:
+            _RESOLVE_CACHE.popitem(last=False)
+    else:
+        _RESOLVE_CACHE.move_to_end(key)
+    return sched
 
 
 def resolve_forward(
@@ -107,7 +161,7 @@ def resolve_forward(
     return resolve_schedule(name, cfg, ecfg).forward
 
 
-@register_schedule("sequential")
+@register_schedule("sequential", config_fields=("pwl",))
 def _sequential(cfg: ModelConfig, ecfg: "EngineConfig") -> Schedule:
     def forward(params, xs):
         return lstm_ae_sequential(params, xs, pwl=ecfg.pwl)
@@ -115,7 +169,7 @@ def _sequential(cfg: ModelConfig, ecfg: "EngineConfig") -> Schedule:
     return Schedule("sequential", "sequential", "sequential", forward)
 
 
-@register_schedule("wavefront")
+@register_schedule("wavefront", config_fields=("pwl",))
 def _wavefront(cfg: ModelConfig, ecfg: "EngineConfig") -> Schedule:
     def forward(params, xs):
         return wavefront_forward(params, xs, pwl=ecfg.pwl)
@@ -123,7 +177,51 @@ def _wavefront(cfg: ModelConfig, ecfg: "EngineConfig") -> Schedule:
     return Schedule("wavefront", "wavefront", "dataflow", forward)
 
 
-@register_schedule("pipelined")
+def _divisor_block(n: int, cap: int = 128) -> int:
+    """Largest block size <= cap that divides n (Pallas grid constraint)."""
+    d = min(n, cap)
+    while n % d:
+        d -= 1
+    return d
+
+
+@register_schedule("fused", config_fields=("pwl",))
+def _fused(cfg: ModelConfig, ecfg: "EngineConfig") -> Schedule:
+    """Pallas fused-cell schedule (ROADMAP follow-up): scans the fused
+    MVM_X+MVM_H+gates kernel of ``kernels/lstm_cell.py`` over the
+    (layer, time) grid layer-by-layer — the paper's single-module datapath
+    as one MXU kernel per (layer, timestep).  Falls back to interpret mode
+    off-TPU so CPU CI exercises the same kernel code."""
+    from repro.kernels.lstm_cell import lstm_cell_pallas, pack_weights
+
+    interpret = jax.default_backend() != "tpu"
+
+    def forward(params, xs):
+        ys = xs
+        for layer in params["layers"]:
+            wx, wh, b = pack_weights(layer)
+            bsz = ys.shape[1]
+            hidden = wh.shape[1]
+            block_b = _divisor_block(bsz)
+            block_h = _divisor_block(hidden)
+            h0 = jnp.zeros((bsz, hidden), ys.dtype)
+            c0 = jnp.zeros((bsz, hidden), jnp.float32)
+
+            def step(carry, x_t, wx=wx, wh=wh, b=b, bb=block_b, bh=block_h):
+                h, c = carry
+                h, c = lstm_cell_pallas(
+                    x_t, h, c, wx, wh, b, block_b=bb, block_h=bh,
+                    pwl=ecfg.pwl, interpret=interpret,
+                )
+                return (h, c), h
+
+            _, ys = jax.lax.scan(step, (h0, c0), ys)
+        return ys
+
+    return Schedule("fused", "fused", "sequential", forward)
+
+
+@register_schedule("pipelined")  # reads every EngineConfig field: key on all
 def _pipelined(cfg: ModelConfig, ecfg: "EngineConfig") -> Schedule:
     if cfg.lstm_ae is None:
         raise ValueError("pipelined schedule requires an lstm_ae config")

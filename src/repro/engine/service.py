@@ -157,6 +157,31 @@ class AnomalyService:
         )
         return session.errors, session
 
+    # -- gateway ----------------------------------------------------------
+
+    def open_gateway(
+        self,
+        *,
+        capacity: int = 32,
+        max_batch: int = 32,
+        max_wait_ms: float = 5.0,
+        max_queue: int = 1024,
+        **kw,
+    ) -> "object":
+        """Open a streaming/micro-batching gateway over this service.
+
+        Returns a :class:`repro.gateway.AnomalyGateway`: a ``capacity``-slot
+        session pool (admit/step/evict over one compiled masked step) plus a
+        shape-bucketed one-shot scoring queue (flush on ``max_batch`` or
+        ``max_wait_ms``, reject past ``max_queue``).  See README §Gateway.
+        """
+        from repro.gateway import AnomalyGateway  # lazy: gateway imports engine
+
+        return AnomalyGateway(
+            self, capacity=capacity, max_batch=max_batch,
+            max_wait_ms=max_wait_ms, max_queue=max_queue, **kw,
+        )
+
     # -- analytics --------------------------------------------------------
 
     def latency_model(self, timesteps: int, **kw) -> LatencyEstimate:

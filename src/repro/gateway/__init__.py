@@ -1,0 +1,158 @@
+"""Streaming anomaly gateway: micro-batched serving over the execution
+engine (ROADMAP follow-up "batched/async request queueing").
+
+One :class:`AnomalyGateway` fronts an :class:`~repro.engine.AnomalyService`
+(or a bare bound :class:`~repro.engine.Engine`) with the two serving
+surfaces the paper's deployment needs:
+
+* **streaming sessions** — ``admit / step / evict / reset`` on a
+  fixed-capacity :class:`~repro.gateway.pool.SessionPool`: up to
+  ``capacity`` concurrent streams share ONE compiled masked step over the
+  pooled state block, so thousands of logical streams churn through
+  without retracing (the software analogue of the paper's always-fed
+  datapath).
+* **one-shot scoring** — ``submit / pump / score`` on a
+  :class:`~repro.gateway.queue.MicroBatcher`: requests are shape-bucketed
+  by sequence length, padded to bucket boundaries, flushed on
+  ``max_batch``/``max_wait_ms``, and rejected with
+  :class:`GatewayOverloadedError` once ``max_queue`` are pending.
+
+``gateway.stats()`` surfaces the shared :class:`Telemetry` (queue depth,
+batch-fill ratio, p50/p95 latency, per-schedule throughput).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Hashable, Mapping, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.engine.base import Engine
+from repro.gateway.pool import PoolFullError, SessionPool, UnknownStreamError
+from repro.gateway.queue import GatewayOverloadedError, MicroBatcher, Ticket, bucket_for
+from repro.gateway.telemetry import Telemetry
+
+
+class AnomalyGateway:
+    """Session pool + micro-batching queue + telemetry over one engine."""
+
+    def __init__(
+        self,
+        service_or_engine,
+        *,
+        capacity: int = 32,
+        max_batch: int = 32,
+        max_wait_ms: float = 5.0,
+        max_queue: int = 1024,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        engine = getattr(service_or_engine, "engine", service_or_engine)
+        if not isinstance(engine, Engine):
+            raise TypeError(
+                f"expected AnomalyService or Engine, got {type(service_or_engine)!r}"
+            )
+        engine._require_params()  # fail fast: a gateway serves a bound model
+        self.engine = engine
+        self.service = service_or_engine if service_or_engine is not engine else None
+        self.telemetry = Telemetry(clock=clock)
+        self.pool = SessionPool(engine, capacity, telemetry=self.telemetry)
+        self.batcher = MicroBatcher(
+            engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
+            max_queue=max_queue, telemetry=self.telemetry, clock=clock,
+        )
+
+    # -- streaming sessions (pool) ----------------------------------------
+
+    def admit(self, stream_id: Hashable) -> int:
+        return self.pool.admit(stream_id)
+
+    def evict(self, stream_id: Hashable) -> float:
+        return self.pool.evict(stream_id)
+
+    def reset(self, stream_id: Hashable) -> None:
+        self.pool.reset(stream_id)
+
+    def step(self, inputs: Mapping[Hashable, "object"]) -> dict:
+        return self.pool.step(inputs)
+
+    # -- one-shot scoring (micro-batcher) ---------------------------------
+
+    def submit(self, series) -> Ticket:
+        return self.batcher.submit(series)
+
+    def pump(self, now: Optional[float] = None) -> int:
+        return self.batcher.pump(now)
+
+    def flush(self) -> int:
+        return self.batcher.flush()
+
+    def score(self, windows: Sequence) -> "object":
+        return self.batcher.score(windows)
+
+    # -- observability ----------------------------------------------------
+
+    def stats(self) -> dict:
+        out = self.telemetry.stats()
+        out.update(
+            schedule=self.engine.schedule.tag,
+            capacity=self.pool.capacity,
+            active_streams=self.pool.active,
+            queue_depth=self.batcher.queue_depth,
+            max_batch=self.batcher.max_batch,
+        )
+        return out
+
+    def __repr__(self) -> str:
+        return (f"AnomalyGateway(schedule={self.engine.schedule.tag}, "
+                f"capacity={self.pool.capacity}, active={self.pool.active}, "
+                f"queue_depth={self.batcher.queue_depth})")
+
+
+def drive_stream_churn(
+    gateway: AnomalyGateway, windows, churn_every: int = 8
+) -> tuple[dict, list]:
+    """Demo/benchmark driver: stream N logical series through the pool.
+
+    ``windows`` is (N, T, F); up to ``capacity`` streams are admitted, all
+    residents step each timestep, and every ``churn_every`` steps the
+    oldest resident is evicted for a waiting stream (late admits score
+    their series' tail — slot churn, the behaviour under test).  Returns
+    ``(finals, unserved)``: {stream index: final running error} for every
+    served stream, plus the indices still waiting when the driver ran out
+    of timesteps (only capacity + (T-1)//churn_every streams can be
+    served) — callers must report those, not drop them silently.  Shared
+    by ``launch/serve --gateway`` and ``examples/serve_anomaly_stream.py``;
+    a real deployment drives admit/step/evict from its transport instead.
+    """
+    windows = np.asarray(windows, np.float32)
+    n, t_len, _ = windows.shape
+    resident = list(range(min(gateway.pool.capacity, n)))
+    waiting = list(range(len(resident), n))
+    finals: dict = {}
+    for sid in resident:
+        gateway.admit(sid)
+    for t in range(t_len):
+        gateway.step({sid: windows[sid, t] for sid in resident})
+        if waiting and t and t % churn_every == 0:
+            old = resident.pop(0)
+            finals[old] = gateway.evict(old)
+            nxt = waiting.pop(0)
+            gateway.admit(nxt)
+            resident.append(nxt)
+    for sid in resident:
+        finals[sid] = gateway.evict(sid)
+    return finals, waiting
+
+
+__all__ = [
+    "AnomalyGateway",
+    "drive_stream_churn",
+    "GatewayOverloadedError",
+    "MicroBatcher",
+    "PoolFullError",
+    "SessionPool",
+    "Telemetry",
+    "Ticket",
+    "UnknownStreamError",
+    "bucket_for",
+]

@@ -1,0 +1,182 @@
+"""Slot-indexed session pool: thousands of logical streams, one program.
+
+The paper keeps its datapath fed by batching independent work into the
+same hardware pipeline; the serving-layer analogue is a fixed block of
+``capacity`` stream slots — stacked per-layer (h, c) plus running error
+sums — stepped by ONE compiled masked program regardless of which logical
+streams are resident.  Admission/eviction only touches host-side slot
+maps and zeroes the slot's state rows, so stream churn never retraces.
+
+Semantics contract (equivalence-tested in tests/test_gateway.py): a
+stream admitted to a slot and stepped through any interleaving of pool
+steps observes exactly the per-timestep running errors it would see alone
+through ``AnomalyService.stream_step`` — batch rows are independent
+through the LSTM cell, and unmasked slots carry their state unchanged.
+"""
+from __future__ import annotations
+
+from typing import Hashable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.base import Engine
+from repro.gateway.telemetry import Telemetry
+
+
+class PoolFullError(RuntimeError):
+    """Admission rejected: every slot is occupied (the gateway's
+    fixed-capacity admission contract — callers shed or retry)."""
+
+
+class UnknownStreamError(KeyError):
+    """A stream id that is not resident in the pool."""
+
+
+class SessionPool:
+    """Fixed-capacity pooled streaming over one :class:`Engine`.
+
+    >>> pool = SessionPool(engine, capacity=32)
+    >>> pool.admit("conn-7")
+    >>> errors = pool.step({"conn-7": x_t})   # any subset of residents
+    >>> final = pool.evict("conn-7")
+    """
+
+    def __init__(
+        self,
+        engine: Engine,
+        capacity: int,
+        telemetry: Optional[Telemetry] = None,
+    ):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.engine = engine
+        self.capacity = capacity
+        self.features = engine.cfg.lstm_ae.input_features
+        self.telemetry = telemetry or Telemetry()
+
+        self._state = engine.init_stream_state(capacity)
+        self._sq_sum = jnp.zeros((capacity,), jnp.float32)
+        self._steps = jnp.zeros((capacity,), jnp.int32)
+        self._slot_of: dict[Hashable, int] = {}
+        self._free: list[int] = list(range(capacity))[::-1]
+
+        def _pool_step(params, x, state, mask, sq_sum, steps):
+            # one fused program: masked cell step + masked error accumulate
+            y_t, state = engine._masked_stream_step(params, x, state, mask)
+            sq = jnp.mean(
+                jnp.square(y_t.astype(jnp.float32) - x.astype(jnp.float32)),
+                axis=-1,
+            )
+            sq_sum = sq_sum + jnp.where(mask, sq, 0.0)
+            steps = steps + mask.astype(jnp.int32)
+            return state, sq_sum, steps
+
+        def _clear_slot(state, sq_sum, steps, slot):
+            state = jax.tree.map(lambda leaf: leaf.at[slot].set(0.0), state)
+            return state, sq_sum.at[slot].set(0.0), steps.at[slot].set(0)
+
+        use_jit = engine.engine_cfg.jit
+        self._pool_step = jax.jit(_pool_step) if use_jit else _pool_step
+        self._clear_slot = jax.jit(_clear_slot) if use_jit else _clear_slot
+
+    # -- membership -------------------------------------------------------
+
+    @property
+    def active(self) -> int:
+        return len(self._slot_of)
+
+    @property
+    def resident(self) -> tuple:
+        return tuple(self._slot_of)
+
+    def admit(self, stream_id: Hashable) -> int:
+        """Claim a slot for ``stream_id`` (zeroed state); raises
+        :class:`PoolFullError` when no slot is free."""
+        if stream_id in self._slot_of:
+            raise ValueError(f"stream {stream_id!r} is already resident")
+        if not self._free:
+            self.telemetry.count("pool.rejected")
+            raise PoolFullError(
+                f"pool at capacity ({self.capacity}); evict a stream first"
+            )
+        slot = self._free.pop()
+        self._slot_of[stream_id] = slot
+        self._zero(slot)
+        self.telemetry.count("pool.admitted")
+        self._gauge_occupancy()
+        return slot
+
+    def evict(self, stream_id: Hashable) -> float:
+        """Release the stream's slot; returns its final running error."""
+        slot = self._require(stream_id)
+        final = float(self.errors()[slot])
+        del self._slot_of[stream_id]
+        self._free.append(slot)
+        self.telemetry.count("pool.evicted")
+        self._gauge_occupancy()
+        return final
+
+    def _gauge_occupancy(self) -> None:
+        self.telemetry.gauge("pool.active", self.active)
+        self.telemetry.gauge("pool.occupancy", self.active / self.capacity)
+
+    def reset(self, stream_id: Hashable) -> None:
+        """Zero a resident stream's state and error counters in place."""
+        self._zero(self._require(stream_id))
+
+    def _require(self, stream_id: Hashable) -> int:
+        try:
+            return self._slot_of[stream_id]
+        except KeyError:
+            raise UnknownStreamError(
+                f"stream {stream_id!r} is not resident (admit it first)"
+            ) from None
+
+    def _zero(self, slot: int) -> None:
+        self._state, self._sq_sum, self._steps = self._clear_slot(
+            self._state, self._sq_sum, self._steps, slot
+        )
+
+    # -- stepping ---------------------------------------------------------
+
+    def step(self, inputs: Mapping[Hashable, "np.ndarray"]) -> dict:
+        """Advance every stream in ``inputs`` one timestep.
+
+        ``inputs`` maps resident stream ids to their next sample ``(F,)``;
+        any subset of residents may step (the rest carry unchanged).
+        Returns {stream_id: running mean error so far} for stepped streams.
+        """
+        if not inputs:
+            return {}
+        slots = [self._require(sid) for sid in inputs]
+        x = np.zeros((self.capacity, self.features), np.float32)
+        mask = np.zeros((self.capacity,), bool)
+        for sid, slot in zip(inputs, slots):
+            sample = np.asarray(inputs[sid], np.float32)
+            if sample.shape != (self.features,):
+                raise ValueError(
+                    f"stream {sid!r}: expected sample shape ({self.features},), "
+                    f"got {sample.shape}"
+                )
+            x[slot] = sample
+            mask[slot] = True
+        self._state, self._sq_sum, self._steps = self._pool_step(
+            self.engine._require_params(), jnp.asarray(x), self._state,
+            jnp.asarray(mask), self._sq_sum, self._steps,
+        )
+        self.telemetry.record_pool_step(len(slots), self.capacity)
+        errs = np.asarray(self.errors())
+        return {sid: float(errs[slot]) for sid, slot in zip(inputs, slots)}
+
+    def errors(self) -> jnp.ndarray:
+        """Running mean error per slot (capacity,) — lazy device array."""
+        return self._sq_sum / jnp.maximum(self._steps, 1).astype(jnp.float32)
+
+    def error_of(self, stream_id: Hashable) -> float:
+        return float(self.errors()[self._require(stream_id)])
+
+    def __repr__(self) -> str:
+        return (f"SessionPool(capacity={self.capacity}, active={self.active}, "
+                f"schedule={self.engine.schedule.tag})")

@@ -1,0 +1,193 @@
+"""Micro-batching request queue for one-shot scoring.
+
+One-shot ``score`` requests (a single (T, F) window each) are coalesced
+into padded, shape-bucketed micro-batches — the serving-layer analogue of
+the paper's inter-module FIFOs keeping the datapath fed.  Requests bucket
+by sequence length (next power-of-two ladder), pad to the bucket
+boundary, and flush when a bucket reaches ``max_batch`` or its oldest
+request has waited ``max_wait_ms``.  Every flush runs the engine's
+masked-score program on a FIXED (max_batch, bucket_T, F) shape, so each
+bucket compiles exactly once; padding lanes are masked out of the scores
+(LSTM causality makes end-padding exact, see ``Engine.score_masked``).
+
+Backpressure: ``submit`` raises :class:`GatewayOverloadedError` once
+``max_queue`` requests are pending — admission control, not silent
+buffering.  The queue is caller-driven (call :meth:`pump` from the serve
+loop) and single-threaded by design; ``clock`` is injectable for tests.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.engine.base import Engine
+from repro.gateway.telemetry import Telemetry
+
+# bucket ladder for sequence lengths; lengths beyond the last rung double
+_BUCKET_LADDER = (8, 16, 32, 64, 128, 256, 512, 1024)
+
+
+class GatewayOverloadedError(RuntimeError):
+    """The request queue is full (``max_queue`` pending) — shed or retry."""
+
+
+class Ticket:
+    """Handle for one submitted request; resolved at flush time."""
+
+    __slots__ = ("t_submit", "_score")
+
+    def __init__(self, t_submit: float):
+        self.t_submit = t_submit
+        self._score: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self._score is not None
+
+    @property
+    def score(self) -> float:
+        if self._score is None:
+            raise RuntimeError("request not scored yet; pump()/flush() the queue")
+        return self._score
+
+
+def bucket_for(t: int, ladder: Sequence[int] = _BUCKET_LADDER) -> int:
+    """Smallest bucket boundary >= t (doubling past the ladder's end)."""
+    for b in ladder:
+        if t <= b:
+            return b
+    b = ladder[-1]
+    while b < t:
+        b *= 2
+    return b
+
+
+class MicroBatcher:
+    """Shape-bucketed micro-batching over ``Engine.score_masked``."""
+
+    def __init__(
+        self,
+        engine: Engine,
+        *,
+        max_batch: int = 32,
+        max_wait_ms: float = 5.0,
+        max_queue: int = 1024,
+        telemetry: Optional[Telemetry] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.engine = engine
+        self.features = engine.cfg.lstm_ae.input_features
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.max_queue = max_queue
+        self.telemetry = telemetry or Telemetry()
+        self._clock = clock
+        # bucket_T -> FIFO of (series (T,F) float32, ticket)
+        self._buckets: dict[int, list[tuple[np.ndarray, Ticket]]] = {}
+        self._depth = 0
+
+    @property
+    def queue_depth(self) -> int:
+        return self._depth
+
+    # -- intake -----------------------------------------------------------
+
+    def submit(self, series) -> Ticket:
+        """Enqueue one (T, F) window for scoring; returns its ticket.
+
+        Raises :class:`GatewayOverloadedError` when ``max_queue`` requests
+        are already pending (backpressure) and ValueError on shape
+        mismatch.  A bucket reaching ``max_batch`` flushes immediately.
+        """
+        arr = np.asarray(series, np.float32)
+        if arr.ndim != 2 or arr.shape[1] != self.features:
+            raise ValueError(
+                f"expected a (T, {self.features}) window, got shape {arr.shape}"
+            )
+        if arr.shape[0] < 1:
+            raise ValueError("empty window (T == 0)")
+        if self._depth >= self.max_queue:
+            self.telemetry.count("queue.rejected")
+            raise GatewayOverloadedError(
+                f"queue full ({self.max_queue} pending); pump() or shed load"
+            )
+        ticket = Ticket(self._clock())
+        tb = bucket_for(arr.shape[0])
+        self._buckets.setdefault(tb, []).append((arr, ticket))
+        self._depth += 1
+        self.telemetry.count("queue.submitted")
+        self.telemetry.gauge("queue.depth", self._depth)
+        if len(self._buckets[tb]) >= self.max_batch:
+            self._flush_bucket(tb)
+        return ticket
+
+    # -- flushing ---------------------------------------------------------
+
+    def pump(self, now: Optional[float] = None) -> int:
+        """Flush every bucket that is full or whose oldest request has
+        waited ``max_wait_ms``; returns the number of requests completed.
+        The serve loop calls this between I/O events."""
+        now = self._clock() if now is None else now
+        completed = 0
+        for tb in list(self._buckets):
+            pending = self._buckets.get(tb)
+            if not pending:
+                continue
+            waited_ms = (now - pending[0][1].t_submit) * 1e3
+            if len(pending) >= self.max_batch or waited_ms >= self.max_wait_ms:
+                completed += self._flush_bucket(tb)
+        return completed
+
+    def flush(self) -> int:
+        """Flush everything pending regardless of age; returns count."""
+        completed = 0
+        for tb in list(self._buckets):
+            while self._buckets.get(tb):
+                completed += self._flush_bucket(tb)
+        return completed
+
+    def _flush_bucket(self, tb: int) -> int:
+        pending = self._buckets[tb]
+        take, self._buckets[tb] = pending[: self.max_batch], pending[self.max_batch:]
+        if not take:
+            return 0
+        n = len(take)
+        # fixed (max_batch, tb, F) shape: one compile per bucket, ever
+        x = np.zeros((self.max_batch, tb, self.features), np.float32)
+        lengths = np.ones((self.max_batch,), np.int32)  # padding lanes: 1, masked anyway
+        for i, (arr, _) in enumerate(take):
+            x[i, : arr.shape[0]] = arr
+            lengths[i] = arr.shape[0]
+        scores = np.asarray(
+            self.engine.score_masked({"series": x, "lengths": lengths})
+        )
+        now = self._clock()
+        oldest_wait_ms = (now - take[0][1].t_submit) * 1e3
+        for i, (_, ticket) in enumerate(take):
+            ticket._score = float(scores[i])
+            self.telemetry.observe_latency_ms((now - ticket.t_submit) * 1e3)
+        self._depth -= n
+        self.telemetry.count("queue.completed", n)
+        self.telemetry.record_batch(n, self.max_batch, oldest_wait_ms)
+        self.telemetry.gauge("queue.depth", self._depth)
+        return n
+
+    # -- convenience ------------------------------------------------------
+
+    def score(self, windows: Sequence) -> np.ndarray:
+        """Submit + flush a list of (T, F) windows synchronously; returns
+        their scores in submission order (flushing mid-way under
+        backpressure instead of failing)."""
+        tickets = []
+        for w in windows:
+            try:
+                tickets.append(self.submit(w))
+            except GatewayOverloadedError:
+                self.flush()
+                tickets.append(self.submit(w))
+        self.flush()
+        return np.array([t.score for t in tickets], np.float32)

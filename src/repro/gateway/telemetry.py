@@ -1,0 +1,116 @@
+"""Gateway telemetry: counters, gauges, and latency percentiles.
+
+The software analogue of the paper's utilization discussion (Table 1):
+whether the datapath stays fed is visible as *batch-fill ratio* (how much
+of each flushed micro-batch was real work vs padding) and *pool
+occupancy* (active slots / capacity).  Everything is plain host-side
+bookkeeping — one `Telemetry` instance is shared by the session pool and
+the micro-batching queue and surfaced via ``gateway.stats()``.
+
+Single-threaded by design (the gateway is caller-driven); ``clock`` is
+injectable so tests control time.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict, deque
+from typing import Callable, Optional
+
+
+def percentile(sorted_vals: list, p: float) -> float:
+    """Nearest-rank percentile of an ascending list (0 when empty)."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, int(round(p / 100.0 * (len(sorted_vals) - 1)))))
+    return float(sorted_vals[idx])
+
+
+class Telemetry:
+    """Counters + gauges + a bounded latency window.
+
+    counters  monotonically increasing event counts (requests, batches,
+              stream-steps, rejections)
+    gauges    last-set values (queue depth, pool occupancy)
+    latency   ring buffer of per-request ms latencies -> p50/p95
+    """
+
+    def __init__(
+        self,
+        clock: Callable[[], float] = time.monotonic,
+        latency_window: int = 4096,
+    ):
+        self._clock = clock
+        self.counters: dict[str, float] = defaultdict(float)
+        self.gauges: dict[str, float] = {}
+        self._latency_ms: deque = deque(maxlen=latency_window)
+        self._t0: Optional[float] = None
+
+    # -- recording --------------------------------------------------------
+
+    def _touch(self) -> float:
+        now = self._clock()
+        if self._t0 is None:
+            self._t0 = now
+        return now
+
+    def count(self, name: str, n: float = 1) -> None:
+        self._touch()
+        self.counters[name] += n
+
+    def gauge(self, name: str, value: float) -> None:
+        self._touch()
+        self.gauges[name] = float(value)
+
+    def observe_latency_ms(self, ms: float) -> None:
+        self._touch()
+        self._latency_ms.append(float(ms))
+
+    def record_batch(self, filled: int, slots: int, wait_ms: float = 0.0) -> None:
+        """One micro-batch flush: ``filled`` real requests in ``slots``
+        padded lanes (fill ratio = filled/slots aggregated over flushes)."""
+        self.count("batch.flushes")
+        self.count("batch.filled", filled)
+        self.count("batch.slots", slots)
+        self.count("batch.wait_ms", wait_ms)
+
+    def record_pool_step(self, active: int, capacity: int) -> None:
+        """One pooled streaming step advancing ``active`` of ``capacity``
+        slots.  Gauges the stepped fraction as ``pool.step_fill`` (the
+        per-step analogue of datapath utilization); ``pool.occupancy``
+        (resident slots / capacity) is gauged by the pool on admit/evict."""
+        self.count("pool.steps")
+        self.count("pool.stream_steps", active)
+        self.gauge("pool.step_fill", active / max(1, capacity))
+
+    # -- reading ----------------------------------------------------------
+
+    def latency_percentile(self, p: float) -> float:
+        return percentile(sorted(self._latency_ms), p)
+
+    @property
+    def uptime_s(self) -> float:
+        if self._t0 is None:
+            return 0.0
+        return max(self._clock() - self._t0, 1e-9)
+
+    def stats(self) -> dict:
+        c = self.counters
+        flushes = c.get("batch.flushes", 0.0)
+        slots = c.get("batch.slots", 0.0)
+        steps = c.get("pool.stream_steps", 0.0)
+        lat = sorted(self._latency_ms)
+        up = self.uptime_s
+        return {
+            "uptime_s": up,
+            "counters": dict(c),
+            "gauges": dict(self.gauges),
+            "batch_fill_ratio": (c.get("batch.filled", 0.0) / slots) if slots else 0.0,
+            "mean_batch_wait_ms": (c.get("batch.wait_ms", 0.0) / flushes) if flushes else 0.0,
+            "latency_ms": {
+                "count": len(lat),
+                "p50": percentile(lat, 50),
+                "p95": percentile(lat, 95),
+            },
+            "requests_per_s": c.get("queue.completed", 0.0) / up if up else 0.0,
+            "stream_steps_per_s": steps / up if up else 0.0,
+        }

@@ -1,9 +1,12 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>``.
 
-Two modes, per model family:
+Modes, per model family:
 - LSTM-AE: anomaly-detection service (``repro.engine.AnomalyService``) on a
   named execution schedule — ``--schedule sequential|wavefront|pipelined``
   (wavefront is the paper's deployment).
+- LSTM-AE with ``--gateway``: the streaming gateway — a ``--capacity``-slot
+  session pool with admit/evict churn plus a micro-batched one-shot scoring
+  queue (``--max-batch`` / ``--max-wait-ms``); prints gateway telemetry.
 - LM families: batched prefill + greedy decode of a few tokens (reduced
   configs on CPU; full configs need a pod mesh).
 """
@@ -14,6 +17,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import get_config, list_archs, reduced_config
 from repro.core.latency import PAPER_RH_M
@@ -54,6 +58,59 @@ def serve_lstm_ae(cfg, args) -> None:
         est = svc.latency_model(args.seq_len)
         print(f"[serve] Eq-1 model ({est.schedule}) for one sequence "
               f"T={args.seq_len}: {est.ms:.3f} ms ({est.cycles} cycles)")
+
+
+def serve_gateway(cfg, args) -> None:
+    """Drive the streaming gateway: pooled sessions with churn + a
+    micro-batched one-shot request stream, then print its telemetry."""
+    svc = AnomalyService(cfg, schedule=args.schedule)
+    feats = cfg.lstm_ae.input_features
+    if args.train_steps:
+        fit_cfg = TimeseriesConfig(features=feats, seq_len=args.seq_len, batch=64)
+        svc.fit(fit_cfg, args.train_steps)
+        svc.calibrate(fit_cfg)
+        print(f"[gateway] fitted {cfg.name}: threshold={svc.threshold:.4f}")
+
+    gw = svc.open_gateway(capacity=args.capacity, max_batch=args.max_batch,
+                          max_wait_ms=args.max_wait_ms)
+    print(f"[gateway] {gw!r}")
+
+    # --- streaming phase: more logical streams than slots, admit/evict churn
+    from repro.gateway import drive_stream_churn
+
+    n_streams = args.streams or 2 * args.capacity
+    data_cfg = TimeseriesConfig(features=feats, seq_len=args.seq_len,
+                                batch=n_streams, anomaly_rate=0.05, seed=7)
+    series, _ = make_batch(data_cfg, 0)
+    xs = np.asarray(series)                      # (N, T, F)
+    t0 = time.perf_counter()
+    finals, unserved = drive_stream_churn(gw, xs)
+    dt = time.perf_counter() - t0
+    stepped = int(gw.stats()["counters"]["pool.stream_steps"])
+    print(f"[gateway] streamed {len(finals)}/{n_streams} logical streams over "
+          f"{gw.pool.capacity} slots: {stepped/dt:,.0f} stream-steps/s "
+          f"({dt*1e3:.1f} ms wall)"
+          + (f", {len(unserved)} still waiting at end" if unserved else ""))
+
+    # --- one-shot phase: micro-batched score requests (mixed lengths)
+    lens = [max(4, args.seq_len - (i % 3) * 2) for i in range(args.requests)]
+    tickets = []
+    for i, L in enumerate(lens):
+        tickets.append(gw.submit(xs[i % n_streams, :L]))
+        gw.pump()
+    gw.flush()
+    scores = np.array([t.score for t in tickets])
+    alerts = int((scores > svc.threshold).sum()) if svc.threshold else 0
+    s = gw.stats()
+    print(f"[gateway] scored {len(tickets)} one-shot requests "
+          f"(fill={s['batch_fill_ratio']:.2f}, "
+          f"p50={s['latency_ms']['p50']:.2f}ms, "
+          f"p95={s['latency_ms']['p95']:.2f}ms)"
+          + (f", alerts={alerts}" if svc.threshold is not None else ""))
+    print(f"[gateway] stats: schedule={s['schedule']} "
+          f"stream_steps_per_s={s['stream_steps_per_s']:,.0f} "
+          f"requests_per_s={s['requests_per_s']:,.0f} "
+          f"rejected={s['counters'].get('queue.rejected', 0):.0f}")
 
 
 def serve_lm(cfg, args) -> None:
@@ -99,13 +156,27 @@ def main() -> None:
                     help="LSTM-AE execution schedule (engine registry name)")
     ap.add_argument("--train-steps", type=int, default=0,
                     help="fit+calibrate the detector before serving (LSTM-AE)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve through the streaming gateway (LSTM-AE): "
+                         "session pool + micro-batched one-shot queue")
+    ap.add_argument("--capacity", type=int, default=32,
+                    help="gateway session-pool slots")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="gateway micro-batch flush size")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="gateway micro-batch max queueing delay")
+    ap.add_argument("--streams", type=int, default=0,
+                    help="gateway logical streams (default 2x capacity)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if cfg.family == "lstm_ae":
-        serve_lstm_ae(cfg, args)
+        if args.gateway:
+            serve_gateway(cfg, args)
+        else:
+            serve_lstm_ae(cfg, args)
     else:
         serve_lm(cfg, args)
 

@@ -23,7 +23,7 @@ from repro.engine import (
 from repro.models import build_model
 
 PAPER_ARCHS = ["lstm-ae-f32-d2", "lstm-ae-f32-d6", "lstm-ae-f64-d2", "lstm-ae-f64-d6"]
-SCHEDULES = ["sequential", "wavefront", "pipelined"]
+SCHEDULES = ["sequential", "wavefront", "pipelined", "fused"]
 
 
 def _setup(arch: str, t: int = 9, b: int = 2):
@@ -106,6 +106,57 @@ def test_pipelined_data_parallel_needs_devices():
     cfg = get_config("lstm-ae-f32-d6")
     with pytest.raises(ValueError, match="data_parallel=2"):
         build_engine(cfg, EngineConfig(schedule="pipelined", data_parallel=2))
+
+
+def test_fused_schedule_uses_pallas_cell():
+    """The fused schedule resolves cleanly (interpret fallback off-TPU) and
+    keeps the sequential Eq-1 accounting (layer-major walk)."""
+    cfg = get_config("lstm-ae-f32-d2")
+    engine = build_engine(cfg, "fused")
+    assert engine.schedule.resolved == "fused"
+    assert engine.schedule.latency_kind == "sequential"
+
+
+def test_resolve_cache_keyed_and_capped():
+    """Regression (ISSUE 2): EngineConfig fields a schedule declares it
+    ignores must not split the resolve cache, and resolving many distinct
+    configs must stay within the LRU cap instead of leaking executors."""
+    from repro.engine import (
+        Schedule,
+        register_schedule,
+        resolve_schedule,
+        schedule_cache_info,
+        unregister_schedule,
+    )
+    from repro.engine.schedules import SCHEDULE_CACHE_CAPACITY
+
+    cfg = get_config("lstm-ae-f32-d2")
+    s0 = resolve_schedule("wavefront", cfg, EngineConfig(schedule="wavefront"))
+    s1 = resolve_schedule(
+        "wavefront", cfg,
+        EngineConfig(schedule="wavefront", n_stages=5, data_parallel=3,
+                     stage_axis="zz", jit=False),
+    )
+    assert s0 is s1  # wavefront keys on pwl only
+    assert s0 is not resolve_schedule(
+        "wavefront", cfg, EngineConfig(schedule="wavefront", pwl=True)
+    )
+
+    @register_schedule("_cache_probe")  # no config_fields: keys on everything
+    def _probe(cfg, ecfg):
+        return Schedule("_cache_probe", "_cache_probe", "sequential",
+                        lambda p, xs: xs)
+
+    try:
+        for i in range(1, 3 * SCHEDULE_CACHE_CAPACITY):
+            resolve_schedule(
+                "_cache_probe", cfg,
+                EngineConfig(schedule="_cache_probe", n_stages=i),
+            )
+            assert schedule_cache_info()["size"] <= SCHEDULE_CACHE_CAPACITY
+    finally:
+        unregister_schedule("_cache_probe")
+    assert "_cache_probe" not in available_schedules()
 
 
 def test_stream_matches_batch_reconstruction():

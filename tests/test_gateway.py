@@ -1,0 +1,283 @@
+"""Streaming anomaly gateway: pooled-session semantics must be
+indistinguishable from solo streaming, micro-batched scoring must match
+direct scoring despite bucketing/padding, and admission control +
+telemetry must hold their contracts."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.config import get_config
+from repro.engine import AnomalyService, available_schedules
+from repro.gateway import (
+    AnomalyGateway,
+    GatewayOverloadedError,
+    PoolFullError,
+    UnknownStreamError,
+    bucket_for,
+)
+
+ARCH = "lstm-ae-f32-d2"
+FEATS = 32
+
+
+@pytest.fixture(scope="module")
+def svc():
+    # untrained service: init params are fine for value-equivalence tests
+    return AnomalyService(ARCH, schedule="wavefront")
+
+
+def _series(stream: int, t_len: int = 16, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, stream]))
+    return rng.standard_normal((t_len, FEATS)).astype(np.float32)
+
+
+def _solo_errors(svc, samples) -> list:
+    """Running errors of one stream stepped alone (B=1), per timestep."""
+    sess = svc.stream_start(1)
+    out = []
+    for x in samples:
+        errs, sess = svc.stream_step(jnp.asarray(x[None]), sess)
+        out.append(float(errs[0]))
+    return out
+
+
+# -- pool semantics --------------------------------------------------------
+
+
+def test_pool_admit_evict_capacity(svc):
+    gw = AnomalyGateway(svc, capacity=3)
+    for i in range(3):
+        gw.admit(i)
+    with pytest.raises(PoolFullError):
+        gw.admit(99)
+    with pytest.raises(ValueError, match="already resident"):
+        gw.admit(0)
+    gw.evict(1)
+    gw.admit(99)  # freed slot is reusable
+    with pytest.raises(UnknownStreamError):
+        gw.step({1: np.zeros(FEATS, np.float32)})
+    with pytest.raises(UnknownStreamError):
+        gw.evict("never-admitted")
+
+
+def test_pool_rejects_bad_sample_shape(svc):
+    gw = AnomalyGateway(svc, capacity=2)
+    gw.admit("a")
+    with pytest.raises(ValueError, match="sample shape"):
+        gw.step({"a": np.zeros(FEATS + 1, np.float32)})
+
+
+@pytest.mark.parametrize("schedule", sorted(available_schedules()))
+def test_pool_interleaved_matches_solo(schedule):
+    """Acceptance: N>=8 streams interleaved through the gateway pool match
+    solo ``stream_step`` runs, for every registered schedule.  Streams step
+    on irregular subsets of rounds, so slots advance out of lockstep."""
+    svc = AnomalyService(ARCH, schedule=schedule)
+    n, t_len = 8, 12
+    gw = AnomalyGateway(svc, capacity=n)
+    data = [_series(i, t_len) for i in range(n)]
+    solo = [_solo_errors(svc, data[i]) for i in range(n)]
+    cursor = [0] * n
+    for i in range(n):
+        gw.admit(i)
+    round_ = 0
+    while any(c < t_len for c in cursor):
+        stepping = {
+            i: data[i][cursor[i]]
+            for i in range(n)
+            if cursor[i] < t_len and (round_ + i) % 3 != i % 2
+        }
+        if stepping:
+            running = gw.step(stepping)
+            for i in stepping:
+                np.testing.assert_allclose(
+                    running[i], solo[i][cursor[i]], rtol=1e-5, atol=1e-5
+                )
+                cursor[i] += 1
+        round_ += 1
+    for i in range(n):
+        assert abs(gw.evict(i) - solo[i][-1]) < 1e-5
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    masks=st.lists(st.integers(0, 255), min_size=3, max_size=6),
+    churn=st.lists(st.integers(0, 7), min_size=1, max_size=3),
+)
+def test_pool_property_any_interleaving(svc, masks, churn):
+    """Property: ANY interleaving of admit/step/evict produces per-stream
+    running errors identical to running each stream alone through
+    ``AnomalyService.stream_step`` (the ISSUE's pool-semantics contract).
+
+    ``masks[r]`` selects which of 8 slots step in round r; after each round
+    one slot id drawn from ``churn`` is evicted and re-admitted as a fresh
+    logical stream (also validated at eviction time)."""
+    n = 8
+    gw = AnomalyGateway(svc, capacity=n)
+    gen = [0] * n
+    consumed: dict = {}
+
+    def sid(i):
+        return (i, gen[i])
+
+    for i in range(n):
+        gw.admit(sid(i))
+        consumed[sid(i)] = []
+    for r, mask in enumerate(masks):
+        stepping = {}
+        for i in range(n):
+            if (mask >> i) & 1:
+                x = _series(i, seed=100 + gen[i])[len(consumed[sid(i)]) % 16]
+                consumed[sid(i)].append(x)
+                stepping[sid(i)] = x
+        if stepping:
+            running = gw.step(stepping)
+            for s in stepping:
+                expect = _solo_errors(svc, consumed[s])[-1]
+                np.testing.assert_allclose(running[s], expect, rtol=1e-5, atol=1e-5)
+        i = churn[r % len(churn)]
+        final = gw.evict(sid(i))
+        if consumed[sid(i)]:
+            expect = _solo_errors(svc, consumed[sid(i)])[-1]
+            np.testing.assert_allclose(final, expect, rtol=1e-5, atol=1e-5)
+        del consumed[sid(i)]
+        gen[i] += 1
+        gw.admit(sid(i))
+        consumed[sid(i)] = []
+
+
+def test_pool_reset_restarts_error_accumulation(svc):
+    gw = AnomalyGateway(svc, capacity=2)
+    gw.admit("a")
+    data = _series(3, 6)
+    for t in range(3):
+        gw.step({"a": data[t]})
+    gw.reset("a")
+    for t in range(3):
+        running = gw.step({"a": data[t]})
+    np.testing.assert_allclose(
+        running["a"], _solo_errors(gw.service, data[:3])[-1], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_drive_stream_churn_accounts_for_all_streams(svc):
+    """The demo driver must account for every requested stream: served ones
+    return a final error, the rest are reported unserved (never dropped)."""
+    from repro.gateway import drive_stream_churn
+
+    gw = AnomalyGateway(svc, capacity=2)
+    windows = np.stack([_series(i, 10) for i in range(6)])
+    finals, unserved = drive_stream_churn(gw, windows, churn_every=4)
+    assert set(finals) | set(unserved) == set(range(6))
+    assert not set(finals) & set(unserved)
+    assert len(finals) == 4  # 2 slots + 2 churn rotations (t=4, t=8)
+    assert gw.pool.active == 0  # driver leaves the pool drained
+
+
+# -- micro-batching queue --------------------------------------------------
+
+
+def test_bucket_ladder():
+    assert bucket_for(1) == 8
+    assert bucket_for(8) == 8
+    assert bucket_for(9) == 16
+    assert bucket_for(1025) == 2048
+
+
+def test_batcher_matches_direct_score_across_buckets(svc):
+    """Mixed lengths spanning bucket boundaries: padded bucket scoring must
+    equal direct (B=1, exact-length) engine scoring per request."""
+    gw = AnomalyGateway(svc, capacity=1, max_batch=4, max_wait_ms=0.0)
+    lens = [5, 8, 9, 16, 17, 31, 12, 7]
+    windows = [_series(i, L, seed=5) for i, L in enumerate(lens)]
+    scores = gw.score(windows)
+    for w, s in zip(windows, scores):
+        direct = float(svc.score(jnp.asarray(w[None]))[0])
+        np.testing.assert_allclose(s, direct, rtol=1e-5, atol=1e-5)
+
+
+def test_batcher_backpressure(svc):
+    gw = AnomalyGateway(svc, capacity=1, max_batch=8, max_queue=3,
+                        max_wait_ms=1e9)
+    for i in range(3):
+        gw.submit(_series(i, 6))
+    with pytest.raises(GatewayOverloadedError):
+        gw.submit(_series(9, 6))
+    assert gw.stats()["counters"]["queue.rejected"] == 1
+    gw.flush()
+    gw.submit(_series(9, 6))  # drained queue admits again
+
+
+def test_batcher_flush_on_max_batch(svc):
+    gw = AnomalyGateway(svc, capacity=1, max_batch=3, max_wait_ms=1e9)
+    tickets = [gw.submit(_series(i, 6)) for i in range(3)]
+    assert all(t.done for t in tickets)  # size trigger, no pump needed
+    assert gw.batcher.queue_depth == 0
+
+
+def test_batcher_flush_on_max_wait():
+    clock_now = [0.0]
+    svc = AnomalyService(ARCH, schedule="wavefront")
+    gw = AnomalyGateway(svc, capacity=1, max_batch=8, max_wait_ms=50.0,
+                        clock=lambda: clock_now[0])
+    t = gw.submit(_series(0, 6))
+    assert gw.pump() == 0 and not t.done       # too young to flush
+    clock_now[0] = 0.049
+    assert gw.pump() == 0 and not t.done
+    clock_now[0] = 0.051                        # oldest aged past max_wait
+    assert gw.pump() == 1 and t.done
+    with pytest.raises(RuntimeError, match="pump"):
+        AnomalyGateway(svc, capacity=1).submit(_series(0, 6)).score  # noqa: B018
+
+
+def test_batcher_rejects_bad_shapes(svc):
+    gw = AnomalyGateway(svc, capacity=1)
+    with pytest.raises(ValueError, match="window"):
+        gw.submit(np.zeros((4, FEATS + 1), np.float32))
+    with pytest.raises(ValueError, match="window"):
+        gw.submit(np.zeros((FEATS,), np.float32))
+
+
+# -- telemetry + wiring ----------------------------------------------------
+
+
+def test_telemetry_stats(svc):
+    gw = AnomalyGateway(svc, capacity=4, max_batch=4, max_wait_ms=0.0)
+    gw.admit("a")
+    gw.admit("b")
+    for t in range(4):
+        gw.step({"a": _series(0, 8)[t], "b": _series(1, 8)[t]})
+    gw.score([_series(2, 10), _series(3, 10)])
+    s = gw.stats()
+    assert s["schedule"] == "wavefront"
+    assert s["capacity"] == 4 and s["active_streams"] == 2
+    assert s["counters"]["pool.stream_steps"] == 8
+    assert s["counters"]["queue.completed"] == 2
+    assert 0.0 < s["batch_fill_ratio"] <= 1.0
+    assert s["latency_ms"]["count"] == 2
+    assert s["latency_ms"]["p50"] <= s["latency_ms"]["p95"]
+    assert s["gauges"]["pool.occupancy"] == 0.5  # 2 resident / 4 slots
+    assert s["gauges"]["pool.step_fill"] == 0.5  # 2 stepped / 4 slots
+    assert s["stream_steps_per_s"] > 0
+
+
+def test_service_open_gateway_binds_engine(svc):
+    gw = svc.open_gateway(capacity=2, max_batch=4)
+    assert gw.engine is svc.engine
+    assert gw.service is svc
+    assert gw.pool.capacity == 2 and gw.batcher.max_batch == 4
+
+
+def test_gateway_requires_bound_params():
+    from repro.engine import build_engine
+
+    engine = build_engine(get_config(ARCH), "wavefront")  # no params bound
+    with pytest.raises(ValueError, match="bind"):
+        AnomalyGateway(engine, capacity=2)
+
+
+def test_gateway_rejects_non_engine():
+    with pytest.raises(TypeError, match="AnomalyService or Engine"):
+        AnomalyGateway(object(), capacity=2)
