@@ -17,6 +17,10 @@ the table-specific payload, ';'-separated).
                        one-stream-per-call baseline: stream-steps/sec per
                        pool size and schedule (``--json`` writes the rows
                        to a BENCH_gateway.json-style file for trending)
+  gateway_transport  — the asyncio JSON-lines transport vs in-process
+                       gateway calls: per-request wire overhead for
+                       one-shot scoring and session stepping
+                       (``--json BENCH_transport.json`` in CI)
   roofline_cells     — §Roofline summary over experiments/dryrun artifacts
 
 ``--tables`` selects a subset; ``--json PATH`` additionally dumps the
@@ -252,6 +256,82 @@ def gateway_throughput() -> list[str]:
     return rows
 
 
+def gateway_transport() -> list[str]:
+    """Per-request overhead of the asyncio JSON-lines transport vs
+    in-process gateway calls (``--json BENCH_transport.json`` in CI).
+
+    ``transport.score.*`` — one-shot scoring: a client submits ``n_req``
+    mixed windows over a real socket (server-side micro-batching +
+    background pump) vs the same windows through ``gateway.score`` in
+    process.  ``transport.stream.*`` — per-timestep session stepping over
+    the wire vs in-process ``gateway.step``.  ``overhead_us`` is the added
+    wire+JSON cost per request — the price of not needing a caller-driven
+    pump loop.
+    """
+    import numpy as np
+
+    from repro.engine import AnomalyService
+    from repro.gateway.client import GatewayClient
+    from repro.gateway.server import GatewayServer
+
+    arch, feats = "lstm-ae-f32-d2", 32
+    n_req, t_len, max_batch, n_steps = 64, 32, 16, 128
+    rng = np.random.default_rng(0)
+    windows = rng.standard_normal((n_req, t_len, feats)).astype(np.float32)
+    samples = rng.standard_normal((n_steps, feats)).astype(np.float32)
+    svc = AnomalyService(arch, schedule="wavefront")
+    rows = []
+
+    # -- in-process baselines (gateway API called directly) ----------------
+    gw_local = svc.open_gateway(capacity=4, max_batch=max_batch, max_wait_ms=2.0)
+    gw_local.score(list(windows[:max_batch]))  # compile the bucket
+    t0 = time.perf_counter()
+    gw_local.score(list(windows))
+    local_score_rps = n_req / (time.perf_counter() - t0)
+    gw_local.admit("bench")
+    gw_local.step({"bench": samples[0]})  # compile the pool step
+    t0 = time.perf_counter()
+    for t in range(n_steps):
+        gw_local.step({"bench": samples[t]})
+    local_sps = n_steps / (time.perf_counter() - t0)
+    gw_local.evict("bench")
+
+    # -- the same traffic over the socket transport ------------------------
+    gw_wire = svc.open_gateway(capacity=4, max_batch=max_batch, max_wait_ms=2.0)
+    server = GatewayServer(gw_wire, port=0, pump_interval_ms=1.0)
+    host, port = server.start_in_thread()
+    try:
+        with GatewayClient(host, port) as client:
+            client.score_many(list(windows[:max_batch]))  # warm wire + pool
+            t0 = time.perf_counter()
+            client.score_many(list(windows))
+            wire_score_rps = n_req / (time.perf_counter() - t0)
+            client.step(samples[0])
+            t0 = time.perf_counter()
+            for t in range(n_steps):
+                client.step(samples[t])
+            wire_sps = n_steps / (time.perf_counter() - t0)
+            client.end_session()
+    finally:
+        server.stop_in_thread()
+
+    score_overhead = 1e6 / wire_score_rps - 1e6 / local_score_rps
+    step_overhead = 1e6 / wire_sps - 1e6 / local_sps
+    rows.append(
+        f"transport.score.{arch},{1e6 / wire_score_rps:.1f},"
+        f"wire_rps={wire_score_rps:.0f};local_rps={local_score_rps:.0f};"
+        f"overhead_us={score_overhead:.1f};"
+        f"relative={wire_score_rps / local_score_rps:.2f}x"
+    )
+    rows.append(
+        f"transport.stream.{arch},{1e6 / wire_sps:.1f},"
+        f"wire_sps={wire_sps:.0f};local_sps={local_sps:.0f};"
+        f"overhead_us={step_overhead:.1f};"
+        f"relative={wire_sps / local_sps:.2f}x"
+    )
+    return rows
+
+
 def roofline_cells(dryrun_dir: str = "experiments/dryrun") -> list[str]:
     rows = []
     d = Path(dryrun_dir)
@@ -279,6 +359,7 @@ _TABLES = {
     "schedule_compare": schedule_compare,
     "engine_throughput": engine_throughput,
     "gateway_throughput": gateway_throughput,
+    "gateway_transport": gateway_transport,
     "roofline_cells": roofline_cells,
 }
 

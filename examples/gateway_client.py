@@ -1,0 +1,98 @@
+"""Client for the gateway's JSON-lines socket transport.
+
+Drives a running ``python -m repro.launch.serve --arch <id> --http``
+server end to end: one streaming session (step-per-sample, final score
+on close), a batch of concurrent one-shot score requests (coalesced by
+the server's micro-batcher and flushed by its background pump — no
+client-side pumping), and a live threshold recalibration that takes
+effect without the session being evicted.
+
+Run (two terminals):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch lstm-ae-f32-d2 \\
+      --http --port 8731 --train-steps 0
+  PYTHONPATH=src python examples/gateway_client.py --port 8731
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import numpy as np
+
+from repro.gateway.client import GatewayClient, GatewayClientError
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--timesteps", type=int, default=24,
+                    help="streaming session length")
+    ap.add_argument("--requests", type=int, default=24,
+                    help="concurrent one-shot score requests")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.timesteps < 1 or args.requests < 1:
+        ap.error("--timesteps and --requests must be >= 1")
+
+    rng = np.random.default_rng(args.seed)
+    with GatewayClient(args.host, args.port) as client:
+        assert client.ping()
+        stats = client.stats()
+        feats = int(stats["features"])
+        print(f"connected: schedule={stats['schedule']} "
+              f"capacity={stats['capacity']} features={feats} "
+              f"threshold={stats['threshold']}")
+
+        # --- streaming session: this connection is the stream
+        walk = np.cumsum(rng.standard_normal((args.timesteps, feats)), axis=0)
+        walk = (0.1 * walk).astype(np.float32)
+        t0 = time.perf_counter()
+        for t in range(args.timesteps):
+            resp = client.step(walk[t])
+        final = client.end_session()["final"]
+        dt = time.perf_counter() - t0
+        print(f"streamed {args.timesteps} steps in {dt*1e3:.1f} ms "
+              f"({args.timesteps/dt:,.0f} steps/s over the wire), "
+              f"last running_error={resp['running_error']:.4f}, final={final:.4f}")
+
+        # --- one-shot scores: submit all up front so the server batches them
+        lengths = [max(4, args.timesteps - (i % 5)) for i in range(args.requests)]
+        windows = [rng.standard_normal((L, feats)).astype(np.float32) * 0.1
+                   for L in lengths]
+        t0 = time.perf_counter()
+        scores = client.score_many(windows)
+        dt = time.perf_counter() - t0
+        s = client.stats()
+        print(f"scored {len(scores)} one-shot windows in {dt*1e3:.1f} ms "
+              f"({len(scores)/dt:,.0f} req/s over the wire), "
+              f"fill={s['batch_fill_ratio']:.2f}, "
+              f"p50={s['latency_ms']['p50']:.2f} ms, "
+              f"p95={s['latency_ms']['p95']:.2f} ms")
+
+        # --- live recalibration: swap the threshold mid-connection and
+        # watch alert flags flip on, sessions and queue untouched
+        new_thr = float(np.median(scores))
+        client.recalibrate(new_thr)
+        alerts = sum(
+            1 for w in windows
+            if client.request("score", series=np.asarray(w).tolist()).get("alert")
+        )
+        print(f"recalibrated threshold={new_thr:.4f} live: "
+              f"{alerts}/{len(windows)} windows now alert")
+
+        # --- oversized windows are rejected, not compiled
+        try:
+            client.score(np.zeros((int(s["max_seq_len"]) + 1, feats), np.float32))
+            print("ERROR: oversized window was not rejected", file=sys.stderr)
+            sys.exit(1)
+        except GatewayClientError as exc:
+            print(f"oversized window rejected as expected: {exc.error}")
+    print("client done")
+
+
+if __name__ == "__main__":
+    main()

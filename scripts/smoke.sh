@@ -4,6 +4,8 @@
 #   2. the quickstart example (train -> calibrate -> detect via AnomalyService)
 #   3. the serving launcher on the reduced paper model
 #   4. the streaming gateway (session pool + micro-batched queue)
+#   5. the async transport: server up, client round-trip (one streaming
+#      session + a batch of one-shot scores), SIGTERM -> clean drain
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -17,5 +19,26 @@ python -m repro.launch.serve --arch lstm-ae-f32-d2 \
 
 python -m repro.launch.serve --arch lstm-ae-f32-d2 --gateway --train-steps 0 \
   --capacity 8 --max-batch 8 --seq-len 24 --requests 20
+
+SERVER_LOG=$(mktemp)
+python -m repro.launch.serve --arch lstm-ae-f32-d2 --http --port 0 \
+  --train-steps 0 --capacity 8 --max-batch 8 >"$SERVER_LOG" 2>&1 &
+SERVER_PID=$!
+trap 'kill "$SERVER_PID" 2>/dev/null || true' EXIT
+for _ in $(seq 1 150); do
+  grep -q "listening on" "$SERVER_LOG" && break
+  kill -0 "$SERVER_PID" 2>/dev/null || { cat "$SERVER_LOG"; exit 1; }
+  sleep 0.2
+done
+PORT=$(sed -n 's/.*listening on [^:]*:\([0-9]*\).*/\1/p' "$SERVER_LOG" | head -1)
+[ -n "$PORT" ] || { echo "server never reported its port"; cat "$SERVER_LOG"; exit 1; }
+
+python examples/gateway_client.py --port "$PORT" --timesteps 16 --requests 12
+
+kill -TERM "$SERVER_PID"
+wait "$SERVER_PID"   # non-zero (or hang) here == unclean shutdown, smoke fails
+trap - EXIT
+grep -q "drained" "$SERVER_LOG" || { echo "server did not drain"; cat "$SERVER_LOG"; exit 1; }
+cat "$SERVER_LOG"
 
 echo "smoke OK"

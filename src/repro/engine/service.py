@@ -24,6 +24,8 @@ from repro.engine.base import Engine, EngineConfig, build_engine
 from repro.models.api import build_model
 from repro.utils import Params
 
+_UNSET = object()  # distinguishes "not given" from an explicit None
+
 
 @dataclass
 class StreamSession:
@@ -116,6 +118,36 @@ class AnomalyService:
         self.threshold = calibrate_threshold(self.score(benign), k_sigma=k_sigma)
         return self.threshold
 
+    def recalibrate(
+        self,
+        benign: Union[TimeseriesConfig, jnp.ndarray, None] = None,
+        *,
+        threshold=_UNSET,
+        params: Optional[Params] = None,
+        k_sigma: float = 3.0,
+        seed: int = 99_999,
+    ) -> Optional[float]:
+        """Refresh the live detector in place — no drain, no restart.
+
+        Optionally rebinds ``params`` (e.g. a freshly fitted model) onto
+        the engine, then swaps the threshold: either ``threshold``
+        directly (an explicit None disables alerting — same semantics as
+        :meth:`AnomalyGateway.recalibrate`; omit it to leave the threshold
+        alone), or re-derived from a ``benign`` split (after the param
+        swap, so the new threshold reflects the new model).  Streaming
+        sessions and open gateways keep serving throughout — both read the
+        engine's current params and this threshold per operation.  Returns
+        the threshold now in effect.
+        """
+        if params is not None:
+            self.params = params
+            self.engine.bind(params)
+        if threshold is not _UNSET:
+            self.threshold = None if threshold is None else float(threshold)
+        elif benign is not None:
+            self.calibrate(benign, k_sigma=k_sigma, seed=seed)
+        return self.threshold
+
     # -- batch scoring ----------------------------------------------------
 
     def score(self, series: jnp.ndarray) -> jnp.ndarray:
@@ -166,6 +198,7 @@ class AnomalyService:
         max_batch: int = 32,
         max_wait_ms: float = 5.0,
         max_queue: int = 1024,
+        max_seq_len: Optional[int] = None,
         **kw,
     ) -> "object":
         """Open a streaming/micro-batching gateway over this service.
@@ -173,13 +206,16 @@ class AnomalyService:
         Returns a :class:`repro.gateway.AnomalyGateway`: a ``capacity``-slot
         session pool (admit/step/evict over one compiled masked step) plus a
         shape-bucketed one-shot scoring queue (flush on ``max_batch`` or
-        ``max_wait_ms``, reject past ``max_queue``).  See README §Gateway.
+        ``max_wait_ms``, reject past ``max_queue`` pending or ``max_seq_len``
+        timesteps).  See README §Gateway; front it with
+        :class:`repro.gateway.server.GatewayServer` for socket serving.
         """
         from repro.gateway import AnomalyGateway  # lazy: gateway imports engine
 
         return AnomalyGateway(
             self, capacity=capacity, max_batch=max_batch,
-            max_wait_ms=max_wait_ms, max_queue=max_queue, **kw,
+            max_wait_ms=max_wait_ms, max_queue=max_queue,
+            max_seq_len=max_seq_len, **kw,
         )
 
     # -- analytics --------------------------------------------------------

@@ -19,6 +19,11 @@ surfaces the paper's deployment needs:
 
 ``gateway.stats()`` surfaces the shared :class:`Telemetry` (queue depth,
 batch-fill ratio, p50/p95 latency, per-schedule throughput).
+
+A live deployment fronts the gateway with the asyncio JSON-lines
+transport in :mod:`repro.gateway.server` (background pump, one pool
+session per connection) and refreshes the detector in place via
+:meth:`AnomalyGateway.recalibrate` — no drain required.
 """
 from __future__ import annotations
 
@@ -32,6 +37,8 @@ from repro.gateway.pool import PoolFullError, SessionPool, UnknownStreamError
 from repro.gateway.queue import GatewayOverloadedError, MicroBatcher, Ticket, bucket_for
 from repro.gateway.telemetry import Telemetry
 
+_UNSET = object()
+
 
 class AnomalyGateway:
     """Session pool + micro-batching queue + telemetry over one engine."""
@@ -44,6 +51,7 @@ class AnomalyGateway:
         max_batch: int = 32,
         max_wait_ms: float = 5.0,
         max_queue: int = 1024,
+        max_seq_len: Optional[int] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         engine = getattr(service_or_engine, "engine", service_or_engine)
@@ -54,11 +62,13 @@ class AnomalyGateway:
         engine._require_params()  # fail fast: a gateway serves a bound model
         self.engine = engine
         self.service = service_or_engine if service_or_engine is not engine else None
+        self._threshold: Optional[float] = None  # used when fronting a bare Engine
         self.telemetry = Telemetry(clock=clock)
         self.pool = SessionPool(engine, capacity, telemetry=self.telemetry)
         self.batcher = MicroBatcher(
             engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
-            max_queue=max_queue, telemetry=self.telemetry, clock=clock,
+            max_queue=max_queue, max_seq_len=max_seq_len,
+            telemetry=self.telemetry, clock=clock,
         )
 
     # -- streaming sessions (pool) ----------------------------------------
@@ -89,6 +99,47 @@ class AnomalyGateway:
     def score(self, windows: Sequence) -> "object":
         return self.batcher.score(windows)
 
+    # -- live recalibration ------------------------------------------------
+
+    @property
+    def threshold(self) -> Optional[float]:
+        """The detector threshold alerts compare against (None before any
+        calibration).  Lives on the fronted service when there is one."""
+        if self.service is not None:
+            return self.service.threshold
+        return self._threshold
+
+    def recalibrate(
+        self, *, threshold=_UNSET, params: Optional["object"] = None
+    ) -> dict:
+        """Swap the detection threshold and/or model params in place.
+
+        The swap is atomic from the serving paths' point of view: resident
+        pool streams keep their slots, carried ``(h, c)`` state and running
+        errors, and queued one-shot requests stay queued — each pool step /
+        flush reads the engine's *current* params and each alert decision
+        reads the *current* threshold, so new values simply apply from the
+        next operation on.  No drain, no eviction (the ROADMAP's
+        "threshold/calibration refresh without draining sessions").
+
+        ``threshold`` may be a float or None (disable alerting); omit it to
+        leave the threshold untouched.  ``params`` rebinds the engine (and
+        the fronted service, keeping the two views consistent).  Returns
+        ``{"threshold": ..., "params_swapped": ...}``.
+        """
+        if params is not None:
+            self.engine.bind(params)
+            if self.service is not None:
+                self.service.params = params
+        if threshold is not _UNSET:
+            value = None if threshold is None else float(threshold)
+            if self.service is not None:
+                self.service.threshold = value
+            else:
+                self._threshold = value
+        self.telemetry.count("gateway.recalibrated")
+        return {"threshold": self.threshold, "params_swapped": params is not None}
+
     # -- observability ----------------------------------------------------
 
     def stats(self) -> dict:
@@ -99,6 +150,9 @@ class AnomalyGateway:
             active_streams=self.pool.active,
             queue_depth=self.batcher.queue_depth,
             max_batch=self.batcher.max_batch,
+            max_seq_len=self.batcher.max_seq_len,
+            features=self.batcher.features,
+            threshold=self.threshold,
         )
         return out
 

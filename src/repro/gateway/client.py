@@ -1,0 +1,149 @@
+"""Synchronous JSON-lines client for :class:`~repro.gateway.server.GatewayServer`.
+
+Stdlib-socket counterpart of the wire protocol documented in
+``server.py`` — used by the client example, the transport tests, the
+smoke script and the ``gateway_transport`` benchmark.  One connection
+carries at most one streaming session (the server maps connections to
+pool sessions) plus any number of in-flight one-shot score requests.
+
+Responses can arrive out of submission order (``score`` answers when the
+server's micro-batcher flushes), so the client matches responses to
+requests by ``id``: :meth:`submit` returns a request id immediately and
+:meth:`collect` blocks until that id's response has been read, parking
+any other responses it sees on the way.
+"""
+from __future__ import annotations
+
+import json
+import socket
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+class GatewayClientError(RuntimeError):
+    """An ``ok: false`` response; ``.error`` holds the server-side
+    exception name (e.g. ``"GatewayOverloadedError"``)."""
+
+    def __init__(self, error: str, message: str):
+        super().__init__(f"{error}: {message}")
+        self.error = error
+        self.message = message
+
+
+class GatewayClient:
+    """One connection to a running gateway server.
+
+    >>> with GatewayClient(host, port) as client:
+    ...     client.step(x_t)["running_error"]     # streaming session
+    ...     client.end_session()["final"]
+    ...     client.score(window)                  # one-shot (blocks on flush)
+    ...     rids = [client.submit(w) for w in windows]   # concurrent
+    ...     scores = [client.collect(r)["score"] for r in rids]
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, timeout: float = 30.0):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._rfile = self._sock.makefile("rb")
+        self._next_id = 0
+        self._parked: dict = {}  # id -> response that arrived out of order
+
+    # -- wire --------------------------------------------------------------
+
+    def _send(self, payload: dict) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        payload["id"] = rid
+        self._sock.sendall((json.dumps(payload) + "\n").encode())
+        return rid
+
+    def _read_until(self, rid: int) -> dict:
+        while rid not in self._parked:
+            line = self._rfile.readline()
+            if not line:
+                raise ConnectionError("server closed the connection")
+            resp = json.loads(line)
+            if resp.get("id") is None and not resp.get("ok"):
+                # connection-level failure (unparseable / over-long line):
+                # the server answers without an id and hangs up — surface
+                # its reason instead of a bare ConnectionError later
+                raise GatewayClientError(
+                    resp.get("error", "UnknownError"), resp.get("message", "")
+                )
+            self._parked[resp.get("id")] = resp
+        return self._parked.pop(rid)
+
+    def collect(self, rid: int) -> dict:
+        """Block until request ``rid``'s response arrives; raises
+        :class:`GatewayClientError` on ``ok: false``."""
+        resp = self._read_until(rid)
+        if not resp.get("ok"):
+            raise GatewayClientError(
+                resp.get("error", "UnknownError"), resp.get("message", "")
+            )
+        return resp
+
+    def request(self, op: str, **fields) -> dict:
+        """Send one request and wait for its response."""
+        return self.collect(self._send({"op": op, **fields}))
+
+    # -- streaming session -------------------------------------------------
+
+    def step(self, x_t) -> dict:
+        """Advance this connection's pool session one timestep; returns the
+        response (``running_error`` and, when calibrated, ``alert``)."""
+        return self.request("step", x=np.asarray(x_t, np.float32).tolist())
+
+    def end_session(self) -> dict:
+        """Evict the session; returns the response (``final`` score)."""
+        return self.request("close")
+
+    # -- one-shot scoring --------------------------------------------------
+
+    def submit(self, series) -> int:
+        """Fire a one-shot score request; returns its id for
+        :meth:`collect` (responses arrive on the server's flush cadence)."""
+        return self._send(
+            {"op": "score", "series": np.asarray(series, np.float32).tolist()}
+        )
+
+    def score(self, series) -> float:
+        """Submit one window and block for its score."""
+        return float(self.request("score", series=np.asarray(
+            series, np.float32).tolist())["score"])
+
+    def score_many(self, windows: Sequence) -> list:
+        """Submit every window up front (so the server can micro-batch
+        them), then collect all scores in submission order."""
+        rids = [self.submit(w) for w in windows]
+        return [float(self.collect(rid)["score"]) for rid in rids]
+
+    # -- control -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        return self.request("stats")["stats"]
+
+    def recalibrate(self, threshold: Optional[float]) -> dict:
+        """Swap the server-side detection threshold live (None disables
+        alerting); resident sessions keep serving."""
+        return self.request("recalibrate", threshold=threshold)
+
+    def ping(self) -> bool:
+        return bool(self.request("ping")["ok"])
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        try:
+            self._rfile.close()
+        finally:
+            self._sock.close()
+
+    def __enter__(self) -> "GatewayClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+__all__ = ["GatewayClient", "GatewayClientError"]

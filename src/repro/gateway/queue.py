@@ -11,12 +11,22 @@ bucket compiles exactly once; padding lanes are masked out of the scores
 (LSTM causality makes end-padding exact, see ``Engine.score_masked``).
 
 Backpressure: ``submit`` raises :class:`GatewayOverloadedError` once
-``max_queue`` requests are pending — admission control, not silent
-buffering.  The queue is caller-driven (call :meth:`pump` from the serve
-loop) and single-threaded by design; ``clock`` is injectable for tests.
+``max_queue`` requests are pending (admission control, not silent
+buffering) and ValueError past ``max_seq_len`` (each power-of-two bucket
+beyond the ladder would mint a fresh compiled program — oversized windows
+are a caller error, not a compile request).  The queue is caller-driven
+(call :meth:`pump` from the serve loop, or let a transport's background
+pump task do it) and single-threaded by design; ``clock`` is injectable
+for tests.
+
+Tickets complete future-style: a flush either resolves every taken
+ticket with its score or *fails* them all with the engine's exception —
+requests never sit unresolved after leaving the queue, which is what
+lets an async transport await tickets instead of polling.
 """
 from __future__ import annotations
 
+import logging
 import time
 from typing import Callable, Optional, Sequence
 
@@ -24,6 +34,8 @@ import numpy as np
 
 from repro.engine.base import Engine
 from repro.gateway.telemetry import Telemetry
+
+logger = logging.getLogger(__name__)
 
 # bucket ladder for sequence lengths; lengths beyond the last rung double
 _BUCKET_LADDER = (8, 16, 32, 64, 128, 256, 512, 1024)
@@ -34,23 +46,73 @@ class GatewayOverloadedError(RuntimeError):
 
 
 class Ticket:
-    """Handle for one submitted request; resolved at flush time."""
+    """Future-style handle for one submitted request.
 
-    __slots__ = ("t_submit", "_score")
+    A ticket is *resolved* (score available) or *failed* (the flush's
+    engine exception stored) exactly once, at flush time.  Completion
+    callbacks registered via :meth:`add_done_callback` fire synchronously
+    on whichever path finishes the ticket — success AND error — so a
+    transport can write the response from the callback without polling.
+    """
+
+    __slots__ = ("t_submit", "_score", "_error", "_callbacks")
 
     def __init__(self, t_submit: float):
         self.t_submit = t_submit
         self._score: Optional[float] = None
+        self._error: Optional[BaseException] = None
+        self._callbacks: list = []
 
     @property
     def done(self) -> bool:
-        return self._score is not None
+        """True once the ticket is resolved or failed."""
+        return self._score is not None or self._error is not None
+
+    @property
+    def failed(self) -> bool:
+        return self._error is not None
+
+    def exception(self) -> Optional[BaseException]:
+        """The flush failure that killed this request (None if none yet)."""
+        return self._error
 
     @property
     def score(self) -> float:
+        if self._error is not None:
+            raise self._error
         if self._score is None:
             raise RuntimeError("request not scored yet; pump()/flush() the queue")
         return self._score
+
+    def add_done_callback(self, fn: Callable[["Ticket"], None]) -> None:
+        """Call ``fn(ticket)`` when the ticket completes (immediately if it
+        already has).  Callback exceptions are logged, never propagated —
+        one broken consumer must not wedge a flush for its batchmates."""
+        if self.done:
+            self._run_callback(fn)
+        else:
+            self._callbacks.append(fn)
+
+    def _run_callback(self, fn) -> None:
+        try:
+            fn(self)
+        except Exception:
+            logger.exception("ticket completion callback raised")
+
+    def _finish(self) -> None:
+        callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            self._run_callback(fn)
+
+    def _resolve(self, score: float) -> None:
+        if not self.done:
+            self._score = score
+            self._finish()
+
+    def _fail(self, exc: BaseException) -> None:
+        if not self.done:
+            self._error = exc
+            self._finish()
 
 
 def bucket_for(t: int, ladder: Sequence[int] = _BUCKET_LADDER) -> int:
@@ -74,16 +136,22 @@ class MicroBatcher:
         max_batch: int = 32,
         max_wait_ms: float = 5.0,
         max_queue: int = 1024,
+        max_seq_len: Optional[int] = None,
         telemetry: Optional[Telemetry] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_seq_len is None:
+            max_seq_len = _BUCKET_LADDER[-1]
+        if max_seq_len < 1:
+            raise ValueError(f"max_seq_len must be >= 1, got {max_seq_len}")
         self.engine = engine
         self.features = engine.cfg.lstm_ae.input_features
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
         self.max_queue = max_queue
+        self.max_seq_len = max_seq_len
         self.telemetry = telemetry or Telemetry()
         self._clock = clock
         # bucket_T -> FIFO of (series (T,F) float32, ticket)
@@ -101,7 +169,10 @@ class MicroBatcher:
 
         Raises :class:`GatewayOverloadedError` when ``max_queue`` requests
         are already pending (backpressure) and ValueError on shape
-        mismatch.  A bucket reaching ``max_batch`` flushes immediately.
+        mismatch or when the window is longer than ``max_seq_len`` (the
+        admission limit that keeps the bucket ladder — and therefore the
+        set of compiled shapes — bounded).  A bucket reaching ``max_batch``
+        flushes immediately.
         """
         arr = np.asarray(series, np.float32)
         if arr.ndim != 2 or arr.shape[1] != self.features:
@@ -110,6 +181,12 @@ class MicroBatcher:
             )
         if arr.shape[0] < 1:
             raise ValueError("empty window (T == 0)")
+        if arr.shape[0] > self.max_seq_len:
+            raise ValueError(
+                f"window length {arr.shape[0]} exceeds max_seq_len="
+                f"{self.max_seq_len}; longer windows would compile a fresh "
+                f"bucket shape per power of two (raise max_seq_len to admit)"
+            )
         if self._depth >= self.max_queue:
             self.telemetry.count("queue.rejected")
             raise GatewayOverloadedError(
@@ -151,29 +228,41 @@ class MicroBatcher:
         return completed
 
     def _flush_bucket(self, tb: int) -> int:
+        """Flush up to ``max_batch`` requests from bucket ``tb``; returns the
+        number *successfully scored*.  The taken requests leave the queue
+        unconditionally — an engine failure mid-flush fails their tickets
+        (error state + ``queue.failed``) instead of leaking queue depth and
+        leaving them unresolved forever (the overload-wedge bug)."""
         pending = self._buckets[tb]
         take, self._buckets[tb] = pending[: self.max_batch], pending[self.max_batch:]
         if not take:
             return 0
         n = len(take)
-        # fixed (max_batch, tb, F) shape: one compile per bucket, ever
-        x = np.zeros((self.max_batch, tb, self.features), np.float32)
-        lengths = np.ones((self.max_batch,), np.int32)  # padding lanes: 1, masked anyway
-        for i, (arr, _) in enumerate(take):
-            x[i, : arr.shape[0]] = arr
-            lengths[i] = arr.shape[0]
-        scores = np.asarray(
-            self.engine.score_masked({"series": x, "lengths": lengths})
-        )
+        # the take is out of the queue from here on, success or failure
+        self._depth -= n
+        self.telemetry.gauge("queue.depth", self._depth)
+        try:
+            # fixed (max_batch, tb, F) shape: one compile per bucket, ever
+            x = np.zeros((self.max_batch, tb, self.features), np.float32)
+            lengths = np.ones((self.max_batch,), np.int32)  # padding lanes: 1, masked anyway
+            for i, (arr, _) in enumerate(take):
+                x[i, : arr.shape[0]] = arr
+                lengths[i] = arr.shape[0]
+            scores = np.asarray(
+                self.engine.score_masked({"series": x, "lengths": lengths})
+            )
+        except Exception as exc:
+            self.telemetry.count("queue.failed", n)
+            for _, ticket in take:
+                ticket._fail(exc)
+            return 0
         now = self._clock()
         oldest_wait_ms = (now - take[0][1].t_submit) * 1e3
         for i, (_, ticket) in enumerate(take):
-            ticket._score = float(scores[i])
             self.telemetry.observe_latency_ms((now - ticket.t_submit) * 1e3)
-        self._depth -= n
+            ticket._resolve(float(scores[i]))
         self.telemetry.count("queue.completed", n)
         self.telemetry.record_batch(n, self.max_batch, oldest_wait_ms)
-        self.telemetry.gauge("queue.depth", self._depth)
         return n
 
     # -- convenience ------------------------------------------------------

@@ -1,0 +1,425 @@
+"""Async JSON-lines transport in front of :class:`AnomalyGateway`.
+
+The paper's accelerator wins because its datapath is always fed; the
+in-process gateway reproduces that only while some caller keeps pumping
+the micro-batch queue.  :class:`GatewayServer` closes that gap: an
+asyncio socket server whose *background pump task* flushes age-triggered
+micro-batches on its own clock, so one-shot latency is bounded by
+``max_wait_ms`` — not by when the next request happens to arrive.
+
+Wire protocol — one JSON object per line (UTF-8, ``\\n``-terminated) in
+each direction.  Every request may carry an ``id``, echoed verbatim in
+its response; responses to ``score`` arrive when the micro-batcher
+flushes, i.e. possibly *after* responses to later requests — match on
+``id``, not on order.
+
+======================  ==================================================
+request                 response
+======================  ==================================================
+``{"op": "step",        ``{"ok": true, "op": "step",
+"x": [f_0 .. f_F-1]}``  "running_error": .., "alert": ..?}`` — advances
+                        this connection's pool session one timestep
+                        (admitted on first step; the connection IS the
+                        stream).
+``{"op": "close"}``     ``{"ok": true, "op": "close", "final": ..,
+                        "alert": ..?}`` — evicts the session (final
+                        running error); a later ``step`` starts a fresh
+                        one.  Dropping the connection evicts too, the
+                        final score is just unreported.
+``{"op": "score",       ``{"ok": true, "op": "score", "score": ..,
+"series": [[..] ..]}``  "alert": ..?}`` — one-shot (T, F) window through
+                        the micro-batcher; the response is written when
+                        the ticket's future completes (flush by size,
+                        by the background pump, or at drain).
+``{"op":                ``{"ok": true, "op": "recalibrate",
+"recalibrate",          "threshold": .., "params_swapped": false}`` —
+"threshold": ..}``      live threshold swap, resident sessions keep
+                        serving (param swaps are in-process only).
+``{"op": "stats"}``     ``{"ok": true, "op": "stats", "stats": {..}}``
+``{"op": "ping"}``      ``{"ok": true, "op": "ping"}``
+======================  ==================================================
+
+Failures answer ``{"ok": false, "op": .., "error": "<ExceptionName>",
+"message": ..}`` on the same ``id`` — ``GatewayOverloadedError`` /
+``PoolFullError`` for backpressure, ``ValueError`` for malformed or
+oversized windows, and whatever the engine raised for tickets failed
+mid-flush (future-style error completion, the queue keeps serving).
+
+Concurrency model: everything touching the gateway (handlers + pump)
+runs on ONE event loop, preserving the gateway's single-threaded
+contract; JAX calls block the loop for one step/flush at a time, which
+is the micro-batching granularity anyway.  ``drain()`` is the graceful
+shutdown: stop accepting, flush the queue so every pending ticket
+answers, then evict sessions and close connections.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import logging
+import signal
+import threading
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.gateway import AnomalyGateway
+
+logger = logging.getLogger(__name__)
+
+
+def _error_payload(op: str, exc: BaseException) -> dict:
+    return {
+        "ok": False,
+        "op": op,
+        "error": type(exc).__name__,
+        "message": str(exc),
+    }
+
+
+class GatewayServer:
+    """Serve an :class:`AnomalyGateway` over asyncio JSON-lines sockets.
+
+    >>> server = GatewayServer(svc.open_gateway(capacity=32), port=0)
+    >>> host, port = server.start_in_thread()     # tests/benchmarks
+    >>> # ... or await server.start() inside a running loop
+    >>> server.stop_in_thread()                   # drain + shut down
+
+    ``port=0`` binds an ephemeral port (read it back from ``server.port``
+    after start).  The background pump runs every ``pump_interval_ms``
+    (default: half the batcher's ``max_wait_ms``) so age-triggered
+    flushes never wait on request arrival.
+    """
+
+    def __init__(
+        self,
+        gateway: AnomalyGateway,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        pump_interval_ms: Optional[float] = None,
+        max_line_bytes: int = 16 << 20,
+    ):
+        if not isinstance(gateway, AnomalyGateway):
+            raise TypeError(f"expected AnomalyGateway, got {type(gateway)!r}")
+        self.gateway = gateway
+        self.host = host
+        self.port = port
+        # generous line limit: a max_seq_len x F window as JSON text is
+        # ~20 bytes/float; the gateway's own admission limits do the real
+        # policing, this just keeps asyncio from resetting the connection
+        self.max_line_bytes = max_line_bytes
+        if pump_interval_ms is None:
+            pump_interval_ms = max(0.5, gateway.batcher.max_wait_ms / 2.0)
+        self.pump_interval_s = pump_interval_ms / 1e3
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._pump_task: Optional[asyncio.Task] = None
+        self._handlers: set = set()
+        self._writers: set = set()
+        self._conn_seq = 0
+        self._draining = False
+        # thread-mode bookkeeping (start_in_thread)
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    async def start(self) -> tuple:
+        """Bind the socket and start the background pump; returns
+        ``(host, port)`` actually bound."""
+        if self._server is not None:
+            raise RuntimeError("server already started")
+        self._draining = False
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port, limit=self.max_line_bytes
+        )
+        self.host, self.port = self._server.sockets[0].getsockname()[:2]
+        self._pump_task = asyncio.get_running_loop().create_task(self._pump_loop())
+        return self.host, self.port
+
+    async def drain(self, timeout: float = 10.0) -> None:
+        """Graceful shutdown: stop accepting connections, flush the
+        micro-batch queue (every pending ticket completes — scored or
+        failed — and its response is written), then evict remaining
+        sessions and close the connections."""
+        self._draining = True
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        if self._pump_task is not None:
+            self._pump_task.cancel()
+            await asyncio.gather(self._pump_task, return_exceptions=True)
+            self._pump_task = None
+        try:
+            self.gateway.flush()  # completes pending tickets -> responses go out
+        except Exception:
+            logger.exception("drain: final flush failed")
+        for writer in list(self._writers):
+            try:
+                if writer.can_write_eof():
+                    writer.write_eof()
+                writer.close()
+            except Exception:
+                pass
+        if self._handlers:  # handlers evict their sessions on the way out
+            await asyncio.wait(self._handlers, timeout=timeout)
+
+    async def serve_forever(self) -> None:
+        if self._server is None:
+            raise RuntimeError("call start() first")
+        await self._server.serve_forever()
+
+    async def run_until_signal(
+        self, on_ready: Optional[Callable[["GatewayServer"], None]] = None
+    ) -> None:
+        """start() -> wait for SIGINT/SIGTERM -> drain().  The launcher's
+        serve loop; smoke/CI assert clean shutdown by sending SIGTERM and
+        checking the exit code."""
+        await self.start()
+        if on_ready is not None:
+            on_ready(self)
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            try:
+                loop.add_signal_handler(sig, stop.set)
+            except NotImplementedError:  # non-unix event loops
+                signal.signal(sig, lambda *_: stop.set())
+        await stop.wait()
+        await self.drain()
+
+    # -- thread mode (tests / benchmarks / notebooks) ----------------------
+
+    def start_in_thread(self, ready_timeout: float = 30.0) -> tuple:
+        """Run the server on a private event loop in a daemon thread;
+        returns ``(host, port)``.  All gateway access happens on that
+        loop's thread, preserving the single-threaded gateway contract."""
+        ready = threading.Event()
+        startup_error: list = []
+
+        def _run():
+            self._loop = asyncio.new_event_loop()
+            asyncio.set_event_loop(self._loop)
+            try:
+                try:
+                    self._loop.run_until_complete(self.start())
+                except BaseException as exc:  # surface EADDRINUSE etc. to the
+                    startup_error.append(exc)  # caller, don't die silently
+                    return
+                finally:
+                    ready.set()
+                self._loop.run_forever()
+            finally:
+                self._loop.close()
+
+        self._thread = threading.Thread(
+            target=_run, name="gateway-server", daemon=True
+        )
+        self._thread.start()
+        if not ready.wait(ready_timeout):
+            raise RuntimeError("gateway server failed to start in time")
+        if startup_error:
+            self._thread.join(ready_timeout)
+            self._loop = None
+            self._thread = None
+            raise startup_error[0]
+        return self.host, self.port
+
+    def stop_in_thread(self, timeout: float = 10.0) -> None:
+        """Drain the threaded server and stop its loop/thread.  ``timeout``
+        budgets the drain itself; the cross-thread wait gets headroom on
+        top so a slow-but-progressing drain (e.g. a final flush that still
+        has to compile its bucket) is not aborted midway."""
+        if self._loop is None:
+            return
+        future = asyncio.run_coroutine_threadsafe(self.drain(timeout), self._loop)
+        try:
+            future.result(timeout + 30.0)
+        finally:
+            self._loop.call_soon_threadsafe(self._loop.stop)
+            if self._thread is not None:
+                self._thread.join(timeout)
+            self._loop = None
+            self._thread = None
+
+    # -- the pump ----------------------------------------------------------
+
+    async def _pump_loop(self) -> None:
+        # THE point of the transport: micro-batches flush on age without
+        # any caller in the loop.  Engine failures fail their tickets
+        # inside pump(); this guard only covers bookkeeping bugs so the
+        # pump itself can never die and wedge the queue.
+        while True:
+            try:
+                self.gateway.pump()
+            except Exception:
+                logger.exception("background pump failed; queue state kept")
+            await asyncio.sleep(self.pump_interval_s)
+
+    # -- connection handling ----------------------------------------------
+
+    async def _handle(self, reader, writer) -> None:
+        task = asyncio.current_task()
+        self._handlers.add(task)
+        self._writers.add(writer)
+        self._conn_seq += 1
+        conn = _Connection(self, self._conn_seq, writer)
+        try:
+            while not self._draining:
+                try:
+                    line = await reader.readline()
+                except ValueError as exc:  # line past max_line_bytes: framing
+                    conn.send(_error_payload("?", exc))  # is lost, hang up
+                    break
+                if not line:
+                    break
+                line = line.strip()
+                if not line:
+                    continue
+                conn.dispatch(line)
+                await writer.drain()
+        except (ConnectionResetError, BrokenPipeError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            conn.end_session()
+            self._writers.discard(writer)
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except Exception:
+                pass
+            self._handlers.discard(task)
+
+
+class _Connection:
+    """Per-connection protocol state: at most one pool session (the
+    connection is the stream) plus response writing for in-flight
+    one-shot tickets."""
+
+    def __init__(self, server: GatewayServer, conn_id: int, writer):
+        self.server = server
+        self.gateway = server.gateway
+        self.conn_id = conn_id
+        self.writer = writer
+        self.session_seq = 0
+        self.stream_id = None  # ("conn", id, generation) when resident
+
+    # -- transport out -----------------------------------------------------
+
+    def send(self, payload: dict, rid=None) -> None:
+        if rid is not None:
+            payload["id"] = rid
+        if self.writer.is_closing():
+            return
+        try:
+            self.writer.write((json.dumps(payload) + "\n").encode())
+        except Exception:
+            logger.exception("conn %d: response write failed", self.conn_id)
+
+    # -- dispatch ----------------------------------------------------------
+
+    def dispatch(self, line: bytes) -> None:
+        try:
+            req = json.loads(line)
+            op = req.get("op")
+        except (ValueError, AttributeError) as exc:
+            self.send(_error_payload("?", exc))
+            return
+        rid = req.get("id")
+        handler = getattr(self, f"_op_{op}", None) if isinstance(op, str) else None
+        if handler is None:
+            self.send(
+                _error_payload(str(op), ValueError(f"unknown op {op!r}")), rid
+            )
+            return
+        try:
+            handler(req, rid)
+        except Exception as exc:  # per-request isolation: one bad request
+            self.send(_error_payload(op, exc), rid)  # never drops the conn
+
+    def _alert_field(self, payload: dict, value: float) -> dict:
+        threshold = self.gateway.threshold
+        if threshold is not None:
+            payload["alert"] = bool(value > threshold)
+        return payload
+
+    # -- streaming session ops --------------------------------------------
+
+    def _op_step(self, req: dict, rid) -> None:
+        # validate the payload BEFORE admitting: a malformed first step
+        # must not pin a pool slot that never serves
+        x = np.asarray(req["x"], np.float32)
+        feats = self.gateway.pool.features
+        if x.shape != (feats,):
+            raise ValueError(f"expected sample shape ({feats},), got {x.shape}")
+        if self.stream_id is None:
+            self.session_seq += 1
+            sid = ("conn", self.conn_id, self.session_seq)
+            self.gateway.admit(sid)  # PoolFullError -> error response
+            self.stream_id = sid
+        running = self.gateway.step({self.stream_id: x})[self.stream_id]
+        self.send(
+            self._alert_field({"ok": True, "op": "step", "running_error": running}, running),
+            rid,
+        )
+
+    def _op_close(self, req: dict, rid) -> None:
+        if self.stream_id is None:
+            raise ValueError("no open session on this connection (step first)")
+        final = self.gateway.evict(self.stream_id)
+        self.stream_id = None
+        self.send(
+            self._alert_field({"ok": True, "op": "close", "final": final}, final), rid
+        )
+
+    def end_session(self) -> None:
+        """Evict this connection's session if resident (connection
+        teardown path; the final score is unreported on abrupt drops)."""
+        if self.stream_id is None:
+            return
+        try:
+            self.gateway.evict(self.stream_id)
+        except Exception:
+            logger.exception("conn %d: eviction at teardown failed", self.conn_id)
+        finally:
+            self.stream_id = None
+
+    # -- one-shot scoring --------------------------------------------------
+
+    def _op_score(self, req: dict, rid) -> None:
+        series = np.asarray(req["series"], np.float32)
+        ticket = self.gateway.submit(series)  # overload/shape errors -> dispatch
+
+        def _completed(t) -> None:
+            if t.failed:
+                self.send(_error_payload("score", t.exception()), rid)
+            else:
+                self.send(
+                    self._alert_field(
+                        {"ok": True, "op": "score", "score": t.score}, t.score
+                    ),
+                    rid,
+                )
+
+        # fires now if submit's size-trigger already flushed the bucket,
+        # later from the background pump / drain otherwise
+        ticket.add_done_callback(_completed)
+
+    # -- control ops -------------------------------------------------------
+
+    def _op_recalibrate(self, req: dict, rid) -> None:
+        kw = {}
+        if "threshold" in req:
+            kw["threshold"] = req["threshold"]
+        out = self.gateway.recalibrate(**kw)
+        self.send({"ok": True, "op": "recalibrate", **out}, rid)
+
+    def _op_stats(self, req: dict, rid) -> None:
+        self.send({"ok": True, "op": "stats", "stats": self.gateway.stats()}, rid)
+
+    def _op_ping(self, req: dict, rid) -> None:
+        self.send({"ok": True, "op": "ping"}, rid)
+
+
+__all__ = ["GatewayServer"]

@@ -7,6 +7,9 @@ Modes, per model family:
 - LSTM-AE with ``--gateway``: the streaming gateway — a ``--capacity``-slot
   session pool with admit/evict churn plus a micro-batched one-shot scoring
   queue (``--max-batch`` / ``--max-wait-ms``); prints gateway telemetry.
+- LSTM-AE with ``--http``: the same gateway behind the asyncio JSON-lines
+  socket transport (``--host`` / ``--port``; background pump, graceful
+  drain on SIGINT/SIGTERM) — drive it with ``examples/gateway_client.py``.
 - LM families: batched prefill + greedy decode of a few tokens (reduced
   configs on CPU; full configs need a pod mesh).
 """
@@ -100,7 +103,8 @@ def serve_gateway(cfg, args) -> None:
         gw.pump()
     gw.flush()
     scores = np.array([t.score for t in tickets])
-    alerts = int((scores > svc.threshold).sum()) if svc.threshold else 0
+    # NB: "is not None" — a calibrated threshold of 0.0 is a real threshold
+    alerts = int((scores > svc.threshold).sum()) if svc.threshold is not None else 0
     s = gw.stats()
     print(f"[gateway] scored {len(tickets)} one-shot requests "
           f"(fill={s['batch_fill_ratio']:.2f}, "
@@ -111,6 +115,42 @@ def serve_gateway(cfg, args) -> None:
           f"stream_steps_per_s={s['stream_steps_per_s']:,.0f} "
           f"requests_per_s={s['requests_per_s']:,.0f} "
           f"rejected={s['counters'].get('queue.rejected', 0):.0f}")
+
+
+def serve_http(cfg, args) -> None:
+    """Run the asyncio JSON-lines transport (``repro.gateway.server``) in
+    front of the gateway until SIGINT/SIGTERM, then drain gracefully.
+    Clients: ``examples/gateway_client.py`` or
+    ``repro.gateway.client.GatewayClient``."""
+    from repro.gateway.server import GatewayServer
+
+    svc = AnomalyService(cfg, schedule=args.schedule)
+    if args.train_steps:
+        fit_cfg = TimeseriesConfig(features=cfg.lstm_ae.input_features,
+                                   seq_len=args.seq_len, batch=64)
+        svc.fit(fit_cfg, args.train_steps)
+        svc.calibrate(fit_cfg)
+        print(f"[http] fitted {cfg.name}: threshold={svc.threshold:.4f}",
+              flush=True)
+    gw = svc.open_gateway(capacity=args.capacity, max_batch=args.max_batch,
+                          max_wait_ms=args.max_wait_ms)
+    server = GatewayServer(gw, host=args.host, port=args.port)
+
+    def _ready(srv) -> None:
+        print(f"[http] listening on {srv.host}:{srv.port} "
+              f"(schedule={gw.engine.schedule.tag}, capacity={gw.pool.capacity}, "
+              f"max_batch={gw.batcher.max_batch}, "
+              f"max_wait_ms={gw.batcher.max_wait_ms})", flush=True)
+
+    import asyncio
+
+    asyncio.run(server.run_until_signal(on_ready=_ready))
+    s = gw.stats()
+    print(f"[http] drained: {s['counters'].get('queue.completed', 0):.0f} one-shot "
+          f"scores ({s['counters'].get('queue.failed', 0):.0f} failed, "
+          f"{s['counters'].get('queue.rejected', 0):.0f} rejected), "
+          f"{s['counters'].get('pool.stream_steps', 0):.0f} stream-steps over "
+          f"{s['counters'].get('pool.admitted', 0):.0f} sessions", flush=True)
 
 
 def serve_lm(cfg, args) -> None:
@@ -159,6 +199,15 @@ def main() -> None:
     ap.add_argument("--gateway", action="store_true",
                     help="serve through the streaming gateway (LSTM-AE): "
                          "session pool + micro-batched one-shot queue")
+    ap.add_argument("--http", action="store_true",
+                    help="serve the gateway over the asyncio JSON-lines "
+                         "transport until SIGTERM (LSTM-AE); see README "
+                         "§Transport")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="transport bind host (--http)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="transport bind port; 0 picks an ephemeral port "
+                         "(printed on the 'listening on' line)")
     ap.add_argument("--capacity", type=int, default=32,
                     help="gateway session-pool slots")
     ap.add_argument("--max-batch", type=int, default=16,
@@ -173,7 +222,9 @@ def main() -> None:
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if cfg.family == "lstm_ae":
-        if args.gateway:
+        if args.http:
+            serve_http(cfg, args)
+        elif args.gateway:
             serve_gateway(cfg, args)
         else:
             serve_lstm_ae(cfg, args)

@@ -8,6 +8,13 @@ import pytest
 import jax.numpy as jnp
 
 from _hypothesis_compat import given, settings, st
+from conftest import (
+    GATEWAY_ARCH as ARCH,
+    GATEWAY_FEATS as FEATS,
+    breaking_score_masked,
+    gateway_series as _series,
+    solo_stream_errors as _solo_errors,
+)
 from repro.config import get_config
 from repro.engine import AnomalyService, available_schedules
 from repro.gateway import (
@@ -18,29 +25,11 @@ from repro.gateway import (
     bucket_for,
 )
 
-ARCH = "lstm-ae-f32-d2"
-FEATS = 32
-
 
 @pytest.fixture(scope="module")
 def svc():
     # untrained service: init params are fine for value-equivalence tests
     return AnomalyService(ARCH, schedule="wavefront")
-
-
-def _series(stream: int, t_len: int = 16, seed: int = 0) -> np.ndarray:
-    rng = np.random.default_rng(np.random.SeedSequence([seed, stream]))
-    return rng.standard_normal((t_len, FEATS)).astype(np.float32)
-
-
-def _solo_errors(svc, samples) -> list:
-    """Running errors of one stream stepped alone (B=1), per timestep."""
-    sess = svc.stream_start(1)
-    out = []
-    for x in samples:
-        errs, sess = svc.stream_step(jnp.asarray(x[None]), sess)
-        out.append(float(errs[0]))
-    return out
 
 
 # -- pool semantics --------------------------------------------------------
@@ -238,6 +227,180 @@ def test_batcher_rejects_bad_shapes(svc):
         gw.submit(np.zeros((4, FEATS + 1), np.float32))
     with pytest.raises(ValueError, match="window"):
         gw.submit(np.zeros((FEATS,), np.float32))
+
+
+def test_batcher_rejects_oversized_windows(svc):
+    """max_seq_len is an admission limit: windows past the bucket ladder
+    are a ValueError, not a fresh compiled shape per power of two."""
+    gw = AnomalyGateway(svc, capacity=1, max_seq_len=32)
+    gw.submit(_series(0, 32))  # at the limit: admitted
+    with pytest.raises(ValueError, match="max_seq_len"):
+        gw.submit(_series(1, 33))
+    assert gw.batcher.queue_depth == 1  # rejection did not touch the queue
+    # the default limit is the end of the bucket ladder
+    assert AnomalyGateway(svc, capacity=1).batcher.max_seq_len == 1024
+
+
+# -- flush failure (future-style error completion) -------------------------
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+def _breaking_score_masked(engine, fail_times: list):
+    return breaking_score_masked(
+        engine, fail_times, lambda: _Boom("engine exploded mid-flush")
+    )
+
+
+def test_flush_failure_fails_tickets_and_recovers(svc, monkeypatch):
+    """The depth-leak regression: an engine exception mid-flush must fail
+    the taken tickets (error state + queue.failed), return depth to 0, and
+    leave the queue serving — not wedge it into permanent overload."""
+    gw = AnomalyGateway(svc, capacity=1, max_batch=4, max_queue=4,
+                        max_wait_ms=1e9)
+    fail = [1]
+    monkeypatch.setattr(svc.engine, "score_masked",
+                        _breaking_score_masked(svc.engine, fail))
+    tickets = [gw.submit(_series(i, 6)) for i in range(4)]  # size-trigger flush
+    assert all(t.done and t.failed for t in tickets)
+    assert isinstance(tickets[0].exception(), _Boom)
+    with pytest.raises(_Boom):
+        tickets[0].score  # noqa: B018
+    assert gw.batcher.queue_depth == 0  # depth decremented on the error path
+    s = gw.stats()
+    assert s["counters"]["queue.failed"] == 4
+    assert s["counters"].get("queue.completed", 0) == 0
+    # the queue is still usable: submissions are admitted (no overload
+    # wedge) and the next flush scores normally
+    fresh = [gw.submit(_series(i, 6, seed=2)) for i in range(4)]
+    assert all(t.done and not t.failed for t in fresh)
+    direct = float(svc.score(jnp.asarray(_series(0, 6, seed=2)[None]))[0])
+    np.testing.assert_allclose(fresh[0].score, direct, rtol=1e-5, atol=1e-5)
+    assert gw.stats()["counters"]["queue.completed"] == 4
+
+
+def test_flush_failure_via_pump_keeps_queue_usable(svc, monkeypatch):
+    """Same regression through the pump path: pump() reports 0 completed,
+    fails the bucket's tickets, and later pumps flush fine."""
+    clock_now = [0.0]
+    gw = AnomalyGateway(svc, capacity=1, max_batch=8, max_wait_ms=10.0,
+                        clock=lambda: clock_now[0])
+    fail = [1]
+    monkeypatch.setattr(svc.engine, "score_masked",
+                        _breaking_score_masked(svc.engine, fail))
+    dead = gw.submit(_series(0, 6))
+    clock_now[0] = 0.02
+    assert gw.pump() == 0 and dead.failed
+    assert gw.batcher.queue_depth == 0
+    live = gw.submit(_series(1, 6))
+    clock_now[0] = 0.04
+    assert gw.pump() == 1 and live.done and not live.failed
+
+
+def test_ticket_callbacks_fire_on_success_and_error(svc, monkeypatch):
+    """Future-style completion: callbacks run exactly once on resolve AND
+    on fail, immediately when registered after completion, and a raising
+    callback cannot break its batchmates' completion."""
+    gw = AnomalyGateway(svc, capacity=1, max_batch=2, max_wait_ms=1e9)
+    seen = []
+    t1 = gw.submit(_series(0, 6))
+    t1.add_done_callback(lambda t: seen.append(("a", t.failed)))
+    t1.add_done_callback(lambda t: 1 / 0)  # must not block t2's callback
+    t2 = gw.submit(_series(1, 6))          # completes the pair (size trigger)
+    t2.add_done_callback(lambda t: seen.append(("b", t.failed)))  # post-hoc
+    assert seen == [("a", False), ("b", False)]
+
+    fail = [1]
+    monkeypatch.setattr(svc.engine, "score_masked",
+                        _breaking_score_masked(svc.engine, fail))
+    t3 = gw.submit(_series(2, 6))
+    t3.add_done_callback(lambda t: seen.append(("c", t.failed)))
+    gw.submit(_series(3, 6))
+    assert seen[-1] == ("c", True)
+
+
+# -- live recalibration ----------------------------------------------------
+
+
+def test_recalibrate_under_resident_streams(svc):
+    """Threshold swaps apply to subsequent detections without evicting
+    resident streams or perturbing their pooled running errors."""
+    gw = AnomalyGateway(svc, capacity=2, max_batch=2, max_wait_ms=0.0)
+    gw.admit("a")
+    data = _series(0, 8)
+    for t in range(4):
+        running = gw.step({"a": data[t]})
+    before = running["a"]
+    assert gw.threshold is None  # untrained service: no threshold yet
+
+    out = gw.recalibrate(threshold=0.25)
+    assert out == {"threshold": 0.25, "params_swapped": False}
+    assert gw.threshold == 0.25 and svc.threshold == 0.25  # shared view
+    assert gw.pool.active == 1  # no eviction
+    np.testing.assert_allclose(gw.pool.error_of("a"), before, rtol=0, atol=0)
+
+    # the resident stream keeps its carried state: subsequent steps match
+    # the solo run as if nothing happened
+    for t in range(4, 8):
+        running = gw.step({"a": data[t]})
+    np.testing.assert_allclose(
+        running["a"], _solo_errors(svc, data)[-1], rtol=1e-5, atol=1e-5
+    )
+    # new threshold applies to subsequent detections
+    assert bool(svc.alerts(jnp.asarray(data[None]))[0]) == (running["a"] > 0.25)
+    gw.recalibrate(threshold=None)  # live disable
+    assert gw.threshold is None
+    gw.evict("a")
+
+
+def test_recalibrate_swaps_params_atomically(svc):
+    """A param swap rebinds the engine for every serving path (pool steps
+    and one-shot flushes) without draining; the service view stays
+    consistent."""
+    other = AnomalyService(ARCH, schedule="wavefront", seed=123)
+    gw = AnomalyGateway(svc, capacity=2, max_batch=1, max_wait_ms=0.0)
+    old_params = svc.params
+    try:
+        gw.admit("a")
+        data = _series(5, 6)
+        gw.step({"a": data[0]})
+        out = gw.recalibrate(params=other.params, threshold=0.5)
+        assert out["params_swapped"] and svc.params is other.params
+        assert gw.pool.active == 1  # resident through the swap
+        # one-shot scoring now runs the swapped model
+        w = _series(6, 8)
+        np.testing.assert_allclose(
+            gw.score([w])[0],
+            float(other.score(jnp.asarray(w[None]))[0]),
+            rtol=1e-5, atol=1e-5,
+        )
+    finally:
+        gw.recalibrate(params=old_params, threshold=None)
+
+
+def test_service_recalibrate_threshold_and_benign():
+    svc = AnomalyService(ARCH, schedule="wavefront")
+    assert svc.recalibrate(threshold=0.0) == 0.0
+    # a legitimate 0.0 threshold must alert (the serve.py truthiness bug)
+    assert bool(svc.alerts(jnp.asarray(_series(0, 8)[None]))[0])
+    benign = jnp.asarray(np.stack([_series(i, 8) for i in range(8)]))
+    thr = svc.recalibrate(benign)
+    assert thr == svc.threshold and thr > 0.0
+    # explicit None disables alerting (same semantics as the gateway);
+    # omitting threshold leaves it untouched
+    assert svc.recalibrate(threshold=None) is None and svc.threshold is None
+    assert svc.recalibrate() is None
+
+
+def test_gateway_over_bare_engine_owns_threshold(svc):
+    """Fronting a bare Engine (no service), the gateway keeps its own
+    threshold so transport-level alerting still works."""
+    gw = AnomalyGateway(svc.engine, capacity=1)
+    assert gw.service is None and gw.threshold is None
+    gw.recalibrate(threshold=1.5)
+    assert gw.threshold == 1.5 and gw.stats()["threshold"] == 1.5
 
 
 # -- telemetry + wiring ----------------------------------------------------

@@ -1,0 +1,261 @@
+"""Async gateway transport: real-socket round-trips must be value-
+identical to the in-process serving paths, the background pump must
+complete one-shot tickets with no caller pumping, backpressure must
+surface as protocol errors, and drain must leave nothing unanswered."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import (
+    GATEWAY_ARCH as ARCH,
+    GATEWAY_FEATS as FEATS,
+    breaking_score_masked,
+    gateway_series as _series,
+    solo_stream_errors as _solo_errors,
+)
+from repro.engine import AnomalyService
+from repro.gateway.client import GatewayClient, GatewayClientError
+from repro.gateway.server import GatewayServer
+
+
+@pytest.fixture(scope="module")
+def svc():
+    return AnomalyService(ARCH, schedule="wavefront")
+
+
+@pytest.fixture
+def served(svc):
+    """A gateway served over a real socket on a private event-loop thread."""
+    gw = svc.open_gateway(capacity=4, max_batch=4, max_wait_ms=10.0)
+    server = GatewayServer(gw, port=0, pump_interval_ms=2.0)
+    host, port = server.start_in_thread()
+    yield host, port, gw
+    server.stop_in_thread()
+
+
+# -- streaming sessions ----------------------------------------------------
+
+
+def test_stream_session_matches_solo_over_socket(served, svc):
+    """Acceptance: a socket streaming session's running errors and final
+    score equal solo ``stream_step`` — the transport adds no semantics."""
+    host, port, _ = served
+    data = _series(0, 12)
+    solo = _solo_errors(svc, data)
+    with GatewayClient(host, port) as client:
+        for t in range(len(data)):
+            resp = client.step(data[t])
+            np.testing.assert_allclose(resp["running_error"], solo[t],
+                                       rtol=1e-5, atol=1e-5)
+        final = client.end_session()["final"]
+    np.testing.assert_allclose(final, solo[-1], rtol=1e-5, atol=1e-5)
+
+
+def test_connection_drop_evicts_session(served):
+    host, port, gw = served
+    client = GatewayClient(host, port)
+    client.step(_series(1, 4)[0])
+    deadline = time.time() + 5
+    while gw.pool.active != 1 and time.time() < deadline:
+        time.sleep(0.01)
+    assert gw.pool.active == 1
+    client.close()  # abrupt: no explicit close op
+    deadline = time.time() + 5
+    while gw.pool.active != 0 and time.time() < deadline:
+        time.sleep(0.01)
+    assert gw.pool.active == 0  # slot reclaimed on teardown
+
+
+def test_concurrent_stream_sessions(served, svc):
+    """Several connections stream at once; each sees exactly its own
+    stream's solo running errors despite sharing the pooled state block."""
+    host, port, _ = served
+    n, t_len = 3, 8
+    data = [_series(10 + i, t_len) for i in range(n)]
+    solo = [_solo_errors(svc, d) for d in data]
+    results = [None] * n
+
+    def run(i):
+        with GatewayClient(host, port) as client:
+            for t in range(t_len):
+                client.step(data[i][t])
+            results[i] = client.end_session()["final"]
+
+    threads = [threading.Thread(target=run, args=(i,)) for i in range(n)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(30)
+    for i in range(n):
+        np.testing.assert_allclose(results[i], solo[i][-1], rtol=1e-5, atol=1e-5)
+
+
+def test_session_reopens_after_close(served):
+    host, port, _ = served
+    with GatewayClient(host, port) as client:
+        client.step(_series(2, 4)[0])
+        first = client.end_session()["final"]
+        with pytest.raises(GatewayClientError) as ei:
+            client.end_session()  # nothing open now
+        assert ei.value.error == "ValueError"
+        client.step(_series(2, 4)[0])  # a later step starts a fresh session
+        assert client.end_session()["final"] == pytest.approx(first)
+
+
+# -- one-shot scoring through the background pump --------------------------
+
+
+def test_one_shot_scores_match_direct(served, svc):
+    """Concurrent one-shot scores over the wire (mixed lengths, out-of-order
+    completion) match direct in-process ``AnomalyService.score``."""
+    host, port, _ = served
+    lens = [5, 9, 16, 7, 12, 6]
+    windows = [_series(20 + i, L, seed=3) for i, L in enumerate(lens)]
+    with GatewayClient(host, port) as client:
+        scores = client.score_many(windows)
+    for w, s in zip(windows, scores):
+        direct = float(svc.score(jnp.asarray(w[None]))[0])
+        np.testing.assert_allclose(s, direct, rtol=1e-5, atol=1e-5)
+
+
+def test_background_pump_flushes_partial_bucket(served):
+    """A single sub-max_batch request completes via the age-triggered
+    background pump — no further traffic, no caller-driven pump()."""
+    host, port, _ = served
+    with GatewayClient(host, port) as client:
+        t0 = time.perf_counter()
+        score = client.score(_series(30, 6))  # blocks until the pump flushes
+        assert time.perf_counter() - t0 < 20.0
+        assert np.isfinite(score)
+
+
+def test_interleaved_stream_and_scores_one_connection(served, svc):
+    """One connection can interleave session steps with in-flight one-shot
+    submissions; score responses arrive out of order and match by id."""
+    host, port, _ = served
+    data = _series(40, 6)
+    solo = _solo_errors(svc, data)
+    windows = [_series(41, 8), _series(42, 11)]
+    with GatewayClient(host, port) as client:
+        rids = [client.submit(w) for w in windows]
+        for t in range(len(data)):  # step responses overtake the scores
+            resp = client.step(data[t])
+            np.testing.assert_allclose(resp["running_error"], solo[t],
+                                       rtol=1e-5, atol=1e-5)
+        scores = [client.collect(r)["score"] for r in rids]
+    for w, s in zip(windows, scores):
+        direct = float(svc.score(jnp.asarray(w[None]))[0])
+        np.testing.assert_allclose(s, direct, rtol=1e-5, atol=1e-5)
+
+
+# -- backpressure + admission over the wire --------------------------------
+
+
+def test_overload_rejection_over_socket(svc):
+    """Queue overload surfaces as an ok:false GatewayOverloadedError
+    response on the offending request only; drain answers the rest."""
+    gw = svc.open_gateway(capacity=1, max_batch=8, max_queue=2,
+                          max_wait_ms=60_000.0)
+    server = GatewayServer(gw, port=0, pump_interval_ms=1000.0)
+    host, port = server.start_in_thread()
+    try:
+        with GatewayClient(host, port) as client:
+            rids = [client.submit(_series(50 + i, 6)) for i in range(3)]
+            with pytest.raises(GatewayClientError) as ei:
+                client.collect(rids[2])
+            assert ei.value.error == "GatewayOverloadedError"
+            # the two admitted requests are still pending (queue intact)
+            assert gw.batcher.queue_depth == 2
+    finally:
+        server.stop_in_thread()  # drain flushes the two pending tickets
+    assert gw.batcher.queue_depth == 0
+    assert gw.stats()["counters"]["queue.completed"] == 2
+
+
+def test_pool_full_rejects_fifth_session(served):
+    host, port, _ = served  # capacity=4
+    clients = [GatewayClient(host, port) for _ in range(5)]
+    try:
+        for c in clients[:4]:
+            c.step(np.zeros(FEATS, np.float32))
+        with pytest.raises(GatewayClientError) as ei:
+            clients[4].step(np.zeros(FEATS, np.float32))
+        assert ei.value.error == "PoolFullError"
+        clients[0].end_session()
+        clients[4].step(np.zeros(FEATS, np.float32))  # freed slot admits
+    finally:
+        for c in clients:
+            c.close()
+
+
+def test_oversized_and_malformed_requests(served):
+    host, port, gw = served
+    with GatewayClient(host, port) as client:
+        with pytest.raises(GatewayClientError) as ei:
+            client.score(np.zeros((2048, FEATS), np.float32))
+        assert ei.value.error == "ValueError" and "max_seq_len" in ei.value.message
+        with pytest.raises(GatewayClientError) as ei:
+            client.request("warp")  # unknown op
+        assert "unknown op" in ei.value.message
+        with pytest.raises(GatewayClientError) as ei:
+            client.step(np.zeros(FEATS + 1, np.float32))  # bad first step
+        assert "sample shape" in ei.value.message
+        assert gw.pool.active == 0  # ...must not pin a phantom pool slot
+        assert client.ping()  # connection survived all three
+
+
+# -- live recalibration over the wire --------------------------------------
+
+
+def test_recalibrate_over_socket_flips_alerts(served, svc):
+    host, port, gw = served
+    data = _series(60, 6)
+    try:
+        with GatewayClient(host, port) as client:
+            base = client.score(data)
+            assert "alert" not in client.request(
+                "score", series=data.tolist())  # uncalibrated: no alert field
+            out = client.recalibrate(base - 1e-6)
+            assert out["threshold"] == pytest.approx(base - 1e-6)
+            assert client.request("score", series=data.tolist())["alert"] is True
+            # the resident-session path alerts off the same live threshold
+            client.step(data[0])
+            assert "alert" in client.step(data[1])
+            out = client.recalibrate(None)  # live disable
+            assert out["threshold"] is None
+            assert "alert" not in client.request("score", series=data.tolist())
+    finally:
+        gw.recalibrate(threshold=None)  # svc is module-scoped: restore
+
+
+# -- failure injection through the transport -------------------------------
+
+
+def test_engine_failure_mid_flush_leaves_server_serving(svc, monkeypatch):
+    """Acceptance: a forced engine failure mid-flush answers the affected
+    requests with the engine's error and the server keeps serving new
+    traffic (no depth leak, no wedge)."""
+    gw = svc.open_gateway(capacity=1, max_batch=2, max_wait_ms=5.0)
+    fail = [1]
+    monkeypatch.setattr(svc.engine, "score_masked",
+                        breaking_score_masked(svc.engine, fail))
+    server = GatewayServer(gw, port=0, pump_interval_ms=2.0)
+    host, port = server.start_in_thread()
+    try:
+        with GatewayClient(host, port) as client:
+            rids = [client.submit(_series(70 + i, 6)) for i in range(2)]
+            for rid in rids:
+                with pytest.raises(GatewayClientError) as ei:
+                    client.collect(rid)
+                assert "injected engine failure" in ei.value.message
+            assert gw.batcher.queue_depth == 0
+            score = client.score(_series(72, 6))  # server still serving
+            direct = float(svc.score(jnp.asarray(_series(72, 6)[None]))[0])
+            np.testing.assert_allclose(score, direct, rtol=1e-5, atol=1e-5)
+        assert gw.stats()["counters"]["queue.failed"] == 2
+    finally:
+        server.stop_in_thread()
