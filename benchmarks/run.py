@@ -21,6 +21,10 @@ the table-specific payload, ';'-separated).
                        gateway calls: per-request wire overhead for
                        one-shot scoring and session stepping
                        (``--json BENCH_transport.json`` in CI)
+  gateway_sharding   — pooled gateway throughput vs data-mesh size 1/2/4
+                       on forced host devices, fixed slots per device
+                       (``--json BENCH_sharding.json`` in CI); each mesh
+                       size re-execs in a subprocess
   roofline_cells     — §Roofline summary over experiments/dryrun artifacts
 
 ``--tables`` selects a subset; ``--json PATH`` additionally dumps the
@@ -332,6 +336,103 @@ def gateway_transport() -> list[str]:
     return rows
 
 
+_SHARDING_SCRIPT = r"""
+import os, sys, time
+mesh = int(sys.argv[1])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={mesh}"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import numpy as np
+from repro.engine import AnomalyService, EngineConfig, Placement
+
+arch, feats = "lstm-ae-f32-d2", 32
+spd, rounds, n_req, t_len, max_batch = 16, 32, 64, 32, 16
+cap = spd * mesh
+svc = AnomalyService(arch, schedule=EngineConfig(
+    schedule="wavefront", placement=Placement.data(mesh)))
+gw = svc.open_gateway(capacity=cap, max_batch=max_batch, max_wait_ms=1e9)
+rng = np.random.default_rng(0)
+xs = rng.standard_normal((rounds, cap, feats)).astype(np.float32)
+for i in range(cap):
+    gw.admit(i)
+gw.step({i: xs[0, i] for i in range(cap)})  # compile the pooled step
+t0 = time.perf_counter()
+for r in range(rounds):
+    gw.step({i: xs[r, i] for i in range(cap)})
+sps = cap * rounds / (time.perf_counter() - t0)
+windows = rng.standard_normal((n_req, t_len, feats)).astype(np.float32)
+gw.score(list(windows[:max_batch]))  # compile the bucket
+t0 = time.perf_counter()
+gw.score(list(windows))
+rps = n_req / (time.perf_counter() - t0)
+s = gw.stats()
+da = s["placement"]["device_active"] if mesh > 1 else [cap]
+print(f"SHARDING mesh={mesh} capacity={cap} pooled_sps={sps:.0f} "
+      f"score_rps={rps:.0f} "
+      f"device_active={'/'.join(str(int(a)) for a in da)}")
+"""
+
+
+def gateway_sharding() -> list[str]:
+    """Pooled gateway throughput vs data-mesh size 1/2/4 on forced host
+    devices (``--json BENCH_sharding.json`` in CI).
+
+    Each mesh size runs in its own subprocess (XLA device count is
+    process-global) with a fixed 16 slots per device, so capacity scales
+    with the mesh — the ISSUE-4 claim under test is that the sharded slot
+    block serves ``slots_per_device x mesh_size`` streams through one
+    compiled masked step.  On a single physical CPU the forced host
+    devices share cores, so this table trends *correct scaling shape and
+    regression*, not real multi-chip speedup.
+    """
+    import os
+    import subprocess
+    import sys
+
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    rows = []
+    base_sps = None
+    for mesh in (1, 2, 4):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        env.pop("JAX_PLATFORMS", None)
+        try:
+            out = subprocess.run(
+                [sys.executable, "-c", _SHARDING_SCRIPT, str(mesh)],
+                env=env, capture_output=True, text=True, timeout=900,
+            )
+            line = next(
+                (l for l in out.stdout.splitlines()
+                 if l.startswith("SHARDING ")),
+                None,
+            )
+            detail = (None if line is not None and out.returncode == 0
+                      else out.stderr[-200:] if out.returncode
+                      else "no SHARDING line")
+        except subprocess.TimeoutExpired:
+            line, detail = None, "timeout after 900s"
+        if detail is not None:
+            # same row key as the success path (trending consumers see the
+            # row flip to an error state, not vanish); commas/newlines are
+            # stripped so the key,value,payload row format survives
+            detail = detail.replace(",", ";").replace("\n", " ")
+            rows.append(
+                f"sharding.lstm-ae-f32-d2.mesh{mesh},0.0,error={detail!r}"
+            )
+            continue
+        kv = dict(part.split("=", 1) for part in line.split()[1:])
+        sps = float(kv["pooled_sps"])
+        if mesh == 1:
+            base_sps = sps
+        scaling = f";vs_mesh1={sps / base_sps:.2f}x" if base_sps else ""
+        rows.append(
+            f"sharding.lstm-ae-f32-d2.mesh{mesh},{1e6 / sps:.1f},"
+            f"capacity={kv['capacity']};pooled_sps={kv['pooled_sps']};"
+            f"score_rps={kv['score_rps']};device_active={kv['device_active']}"
+            f"{scaling}"
+        )
+    return rows
+
+
 def roofline_cells(dryrun_dir: str = "experiments/dryrun") -> list[str]:
     rows = []
     d = Path(dryrun_dir)
@@ -360,6 +461,7 @@ _TABLES = {
     "engine_throughput": engine_throughput,
     "gateway_throughput": gateway_throughput,
     "gateway_transport": gateway_transport,
+    "gateway_sharding": gateway_sharding,
     "roofline_cells": roofline_cells,
 }
 

@@ -6,9 +6,37 @@
 #   4. the streaming gateway (session pool + micro-batched queue)
 #   5. the async transport: server up, client round-trip (one streaming
 #      session + a batch of one-shot scores), SIGTERM -> clean drain
+#   6. the same transport on a sharded placement (--mesh data=2 over two
+#      forced host devices): pool slots + micro-batch rows shard 2-way
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# run one --http server (extra args in $2...) until the client example has
+# driven it, then SIGTERM and assert a clean drain
+run_transport_smoke() {
+  local log="$1"; shift
+  python -m repro.launch.serve --arch lstm-ae-f32-d2 --http --port 0 \
+    --train-steps 0 --capacity 8 --max-batch 8 "$@" >"$log" 2>&1 &
+  local pid=$!
+  trap 'kill "'"$pid"'" 2>/dev/null || true' EXIT
+  for _ in $(seq 1 150); do
+    grep -q "listening on" "$log" && break
+    kill -0 "$pid" 2>/dev/null || { cat "$log"; exit 1; }
+    sleep 0.2
+  done
+  local port
+  port=$(sed -n 's/.*listening on [^:]*:\([0-9]*\).*/\1/p' "$log" | head -1)
+  [ -n "$port" ] || { echo "server never reported its port"; cat "$log"; exit 1; }
+
+  python examples/gateway_client.py --port "$port" --timesteps 16 --requests 12
+
+  kill -TERM "$pid"
+  wait "$pid"   # non-zero (or hang) here == unclean shutdown, smoke fails
+  trap - EXIT
+  grep -q "drained" "$log" || { echo "server did not drain"; cat "$log"; exit 1; }
+  cat "$log"
+}
 
 python -m pytest -x -q
 
@@ -20,25 +48,16 @@ python -m repro.launch.serve --arch lstm-ae-f32-d2 \
 python -m repro.launch.serve --arch lstm-ae-f32-d2 --gateway --train-steps 0 \
   --capacity 8 --max-batch 8 --seq-len 24 --requests 20
 
-SERVER_LOG=$(mktemp)
-python -m repro.launch.serve --arch lstm-ae-f32-d2 --http --port 0 \
-  --train-steps 0 --capacity 8 --max-batch 8 >"$SERVER_LOG" 2>&1 &
-SERVER_PID=$!
-trap 'kill "$SERVER_PID" 2>/dev/null || true' EXIT
-for _ in $(seq 1 150); do
-  grep -q "listening on" "$SERVER_LOG" && break
-  kill -0 "$SERVER_PID" 2>/dev/null || { cat "$SERVER_LOG"; exit 1; }
-  sleep 0.2
-done
-PORT=$(sed -n 's/.*listening on [^:]*:\([0-9]*\).*/\1/p' "$SERVER_LOG" | head -1)
-[ -n "$PORT" ] || { echo "server never reported its port"; cat "$SERVER_LOG"; exit 1; }
+run_transport_smoke "$(mktemp)"
 
-python examples/gateway_client.py --port "$PORT" --timesteps 16 --requests 12
-
-kill -TERM "$SERVER_PID"
-wait "$SERVER_PID"   # non-zero (or hang) here == unclean shutdown, smoke fails
-trap - EXIT
-grep -q "drained" "$SERVER_LOG" || { echo "server did not drain"; cat "$SERVER_LOG"; exit 1; }
-cat "$SERVER_LOG"
+# sharded placement over the wire: two forced host devices, pool slots and
+# micro-batch rows 2-way data-parallel, same client, same clean drain bar
+SHARDED_LOG=$(mktemp)
+(
+  export XLA_FLAGS="--xla_force_host_platform_device_count=2"
+  run_transport_smoke "$SHARDED_LOG" --mesh data=2
+)
+grep -q "mesh=2xdata" "$SHARDED_LOG" || {
+  echo "sharded server did not report its mesh"; cat "$SHARDED_LOG"; exit 1; }
 
 echo "smoke OK"

@@ -2,13 +2,18 @@
 
 - schedules.py  registry of named temporal schedules (sequential | wavefront
                 | pipelined | fused) + ``register_schedule`` for new backends
+- placement.py  ``Placement``: first-class device placement (data-mesh ways
+                + named shardings for pool slots, micro-batch rows and
+                pipeline stages) — threaded through EngineConfig, Engine,
+                the gateway, and ``launch.serve --mesh``
 - base.py       ``Engine``: score / reconstruct / stream / latency_model
                 over any registered schedule (plus masked stream/score
-                primitives for the gateway)
+                primitives for the gateway, placement-aware)
 - service.py    ``AnomalyService``: fit -> calibrate -> score/detect/stream
                 -> ``open_gateway`` (repro.gateway serving layer)
 """
 from repro.engine.base import Engine, EngineConfig, build_engine
+from repro.engine.placement import Placement
 from repro.engine.schedules import (
     ForwardFn,
     Schedule,
@@ -26,6 +31,7 @@ __all__ = [
     "Engine",
     "EngineConfig",
     "ForwardFn",
+    "Placement",
     "Schedule",
     "StreamSession",
     "available_schedules",

@@ -17,6 +17,8 @@ comparison needs and what future backends plug into.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Optional, Union
 
@@ -25,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.config.core import ModelConfig
 from repro.core.latency import PAPER_RH_M, LatencyEstimate, fpga_latency_ms
+from repro.engine.placement import Placement
 from repro.engine.schedules import Schedule, resolve_schedule
 from repro.utils import Params
 
@@ -36,16 +39,69 @@ class EngineConfig:
     ``schedule``       registry name ("sequential" | "wavefront" | "pipelined" | ...)
     ``pwl``            piecewise-linear activations (the paper's HLS numerics)
     ``n_stages``       pipeline stages (pipelined; default: min(devices, depth))
-    ``data_parallel``  batch-shard ways on the data mesh axis (pipelined)
+    ``placement``      device placement (:class:`~repro.engine.placement.Placement`):
+                       data-mesh ways + axis names for pool slots, micro-batch
+                       rows and pipeline stages; defaults to the single-device
+                       no-op placement
     ``jit``            wrap the executor in jax.jit (disable for debugging)
+
+    ``data_parallel`` / ``data_axis`` / ``stage_axis`` are the PR 1–3
+    placement surface, kept as a deprecation shim: ``data_parallel=N`` maps
+    to ``Placement.data(N)`` with a warning — including through
+    ``dataclasses.replace(cfg, data_parallel=N)`` on an unsharded config.
+    After normalisation ``data_parallel`` is *folded into* the placement
+    and reset to None (so the two spellings hash/compare equal, and a
+    later ``replace(cfg, placement=...)`` cannot be overridden by a stale
+    legacy int), while ``data_axis``/``stage_axis`` mirror the placement's
+    axis names.  When an explicitly *sharded* ``placement`` and a legacy
+    int disagree, the placement wins with a ``UserWarning`` (never
+    silently); read the layout from ``cfg.placement``, not the legacy
+    fields.
     """
     schedule: str = "wavefront"
     pwl: bool = False
     n_stages: Optional[int] = None
-    data_parallel: int = 1
-    stage_axis: str = "model"
-    data_axis: str = "data"
+    # DEPRECATED: use placement=Placement.data(N); None once normalised
+    data_parallel: Optional[int] = None
+    stage_axis: str = "model"   # DEPRECATED: use placement=Placement(stage_axis=...)
+    data_axis: str = "data"     # DEPRECATED: use placement=Placement(data_axis=...)
     jit: bool = True
+    placement: Optional[Placement] = None
+
+    def __post_init__(self):
+        pl = self.placement
+        dp = self.data_parallel
+        if pl is None:
+            pl = Placement(data_shards=1, data_axis=self.data_axis,
+                           stage_axis=self.stage_axis)
+        if dp is not None and dp != pl.data_shards:
+            if not pl.is_sharded:
+                # the deprecated spelling (constructor or
+                # dataclasses.replace on an unsharded config): fold it in
+                warnings.warn(
+                    f"EngineConfig(data_parallel={dp}) is deprecated; use "
+                    f"placement=Placement.data({dp})",
+                    DeprecationWarning, stacklevel=3,
+                )
+                pl = dataclasses.replace(pl, data_shards=dp)
+            else:
+                # the legacy int disagrees with a sharded placement
+                # (including data_parallel=1, the legacy 'unshard'): the
+                # placement wins, but never silently — unshard with
+                # placement=Placement.single()
+                warnings.warn(
+                    f"EngineConfig: ignoring data_parallel={dp} in favour "
+                    f"of the explicit placement {pl!r}",
+                    UserWarning, stacklevel=3,
+                )
+        # the placement is now the single source of truth: the legacy int
+        # folds in and resets (so shim and explicit spellings compare
+        # equal, and replacing the placement later is never overridden by
+        # a stale mirror); the axis names mirror the placement
+        object.__setattr__(self, "placement", pl)
+        object.__setattr__(self, "data_parallel", None)
+        object.__setattr__(self, "data_axis", pl.data_axis)
+        object.__setattr__(self, "stage_axis", pl.stage_axis)
 
 
 def _as_engine_cfg(schedule: Union[str, EngineConfig]) -> EngineConfig:
@@ -120,6 +176,63 @@ class Engine:
         mstep = self._masked_stream_step
         self._mstep = jax.jit(mstep) if self.engine_cfg.jit else mstep
 
+        # Placement-aware variants: the same programs jitted with explicit
+        # in/out shardings — batch rows (and streaming state rows) laid out
+        # over the placement's data axis, params replicated.  Built only for
+        # a sharded placement (the single placement is a strict no-op) and
+        # dispatched per call when the leading dim divides the mesh; callers
+        # that need guaranteed sharding (the gateway) pad to a per-device
+        # multiple.  Prejitted schedules (pipelined) manage their own batch
+        # sharding, so only the schedule-independent streaming programs get
+        # sharded variants there.
+        self._sharded: dict[str, "object"] = {}
+        pl = self.placement
+        if pl.is_sharded and self.engine_cfg.jit:
+            rows = pl.row_sharding()   # builds (or fails fast on) the mesh
+            repl = pl.replicated_sharding()
+            if not self.schedule.prejitted:
+                self._sharded["reconstruct"] = jax.jit(
+                    _reconstruct, in_shardings=(repl, rows), out_shardings=rows)
+                self._sharded["score"] = jax.jit(
+                    _score, in_shardings=(repl, rows), out_shardings=rows)
+                self._sharded["score_masked"] = jax.jit(
+                    _score_masked, in_shardings=(repl, rows, rows),
+                    out_shardings=rows)
+            self._sharded["step"] = jax.jit(
+                step, in_shardings=(repl, rows, rows), out_shardings=(rows, rows))
+            self._sharded["mstep"] = jax.jit(
+                mstep, in_shardings=(repl, rows, rows, rows),
+                out_shardings=(rows, rows))
+
+    # -- placement ---------------------------------------------------------
+
+    @property
+    def placement(self) -> Placement:
+        """The device placement this engine's programs are laid out on."""
+        return self.engine_cfg.placement
+
+    def with_placement(self, placement: Placement) -> "Engine":
+        """A new engine on the same model/schedule/params with ``placement``
+        (returns self when the placement already matches).  Compiled
+        programs are NOT shared — sharded and unsharded programs must
+        never collide (the resolve cache keys on placement too)."""
+        if placement == self.placement:
+            return self
+        # data_parallel is always None post-normalisation, so replacing the
+        # placement cannot be vetoed by a stale legacy mirror
+        ecfg = dataclasses.replace(self.engine_cfg, placement=placement)
+        return Engine(self.cfg, ecfg, params=self.params)
+
+    def _row_program(self, key: str, rows: int):
+        """The sharded variant of program ``key`` when one exists and the
+        leading dim splits evenly over the data mesh; None otherwise (the
+        caller falls back to the unsharded program — value-identical, the
+        rows are independent)."""
+        prog = self._sharded.get(key)
+        if prog is not None and rows % self.placement.data_shards == 0:
+            return prog
+        return None
+
     # -- binding ----------------------------------------------------------
 
     def bind(self, params: Params) -> "Engine":
@@ -136,20 +249,28 @@ class Engine:
 
     def reconstruct_with(self, params: Params, batch: dict) -> jnp.ndarray:
         """batch {"series": (B, T, F)} -> reconstruction (B, T, F)."""
-        return self._reconstruct(params, batch["series"])
+        series = batch["series"]
+        prog = self._row_program("reconstruct", series.shape[0]) or self._reconstruct
+        return prog(params, series)
 
     def score_with(self, params: Params, batch: dict) -> jnp.ndarray:
         """batch {"series": (B, T, F)} -> per-sequence reconstruction MSE (B,)
-        — the anomaly score of the paper's application."""
-        return self._score(params, batch["series"])
+        — the anomaly score of the paper's application.  Under a sharded
+        placement the batch rows are scored data-parallel over the mesh."""
+        series = batch["series"]
+        prog = self._row_program("score", series.shape[0]) or self._score
+        return prog(params, series)
 
     def score_masked_with(self, params: Params, batch: dict) -> jnp.ndarray:
         """batch {"series": (B, T, F), "lengths": (B,) int} -> per-sequence
         MSE over each row's first ``lengths[i]`` timesteps.  Rows padded
         beyond their length (and all-padding rows) do not contaminate
-        scores — the micro-batching gateway's bucketed-scoring primitive."""
+        scores — the micro-batching gateway's bucketed-scoring primitive
+        (which pads B to a per-device multiple under a sharded placement)."""
+        series = batch["series"]
         lengths = jnp.asarray(batch["lengths"], jnp.int32)
-        return self._score_masked(params, batch["series"], lengths)
+        prog = self._row_program("score_masked", series.shape[0]) or self._score_masked
+        return prog(params, series, lengths)
 
     def reconstruct(self, batch: dict) -> jnp.ndarray:
         return self.reconstruct_with(self._require_params(), batch)
@@ -192,7 +313,8 @@ class Engine:
         self, params: Params, x_t: jnp.ndarray, state: Params
     ) -> tuple[jnp.ndarray, Params]:
         """One streaming timestep x_t (B, F) -> (reconstruction (B, F), state)."""
-        return self._step(params, x_t, state)
+        prog = self._row_program("step", x_t.shape[0]) or self._step
+        return prog(params, x_t, state)
 
     def stream(self, x_t: jnp.ndarray, state: Params) -> tuple[jnp.ndarray, Params]:
         return self.stream_with(self._require_params(), x_t, state)
@@ -203,8 +325,11 @@ class Engine:
         """Pooled step: x_t (B, F), mask (B,) bool -> (y_t (B, F), state)
         where only masked rows' (h, c) advance (others carry unchanged).
         The gateway session pool runs thousands of logical streams through
-        this one compiled program — slot churn never retraces."""
-        return self._mstep(params, x_t, state, mask)
+        this one compiled program — slot churn never retraces.  Under a
+        sharded placement the slot rows live distributed over the data
+        mesh (state in, state out keep the row sharding)."""
+        prog = self._row_program("mstep", x_t.shape[0]) or self._mstep
+        return prog(params, x_t, state, mask)
 
     def stream_masked(
         self, x_t: jnp.ndarray, state: Params, mask: jnp.ndarray
@@ -229,8 +354,9 @@ class Engine:
         )
 
     def __repr__(self) -> str:
-        return (f"Engine({self.cfg.name}, schedule={self.schedule.tag}, "
-                f"bound={self.params is not None})")
+        pl = f", placement={self.placement!r}" if self.placement.is_sharded else ""
+        return (f"Engine({self.cfg.name}, schedule={self.schedule.tag}"
+                f"{pl}, bound={self.params is not None})")
 
 
 def build_engine(

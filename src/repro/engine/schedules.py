@@ -83,6 +83,8 @@ def register_schedule(name: str, *, config_fields: Optional[tuple[str, ...]] = N
     factory reads (e.g. ``("pwl",)``); resolutions then cache on those
     fields only, so EngineConfigs differing in irrelevant knobs share one
     compiled executor.  Omit it (the safe default) to key on every field.
+    ``placement`` is always part of the key, declared or not — sharded and
+    unsharded device layouts never share a cached Schedule.
     """
     def deco(factory):
         _SCHEDULES[name] = factory
@@ -104,21 +106,34 @@ def available_schedules() -> list[str]:
 
 
 def schedule_cache_info() -> dict:
-    """Resolve-cache occupancy — regression surface for the LRU cap."""
-    return {"size": len(_RESOLVE_CACHE), "capacity": SCHEDULE_CACHE_CAPACITY}
+    """Resolve-cache occupancy — regression surface for the LRU cap.
+
+    ``always_keyed`` are the EngineConfig fields every cache key includes
+    regardless of a schedule's declared ``config_fields``; ``placements``
+    lists the distinct device layouts currently cached (sharded and
+    unsharded resolutions never alias one entry)."""
+    return {
+        "size": len(_RESOLVE_CACHE),
+        "capacity": SCHEDULE_CACHE_CAPACITY,
+        "always_keyed": ("schedule", "placement"),
+        "placements": sorted({repr(k[2].placement) for k in _RESOLVE_CACHE}),
+    }
 
 
 def _canonical_cfg(name: str, engine_cfg: "EngineConfig") -> "EngineConfig":
     """Project ``engine_cfg`` onto the fields schedule ``name`` declares it
     reads; everything else is reset to the EngineConfig default so it cannot
-    split the cache key."""
+    split the cache key.  ``placement`` is ALWAYS part of the key — a
+    prejitted schedule bakes its compiled programs (and mesh) into the
+    Schedule object, so two engines differing only in device layout must
+    never alias one cached program (the ISSUE-4 aliasing bug)."""
     fields = _SCHEDULE_FIELDS.get(name)
     if fields is None:
         return dataclasses.replace(engine_cfg, schedule=name)
     from repro.engine.base import EngineConfig
 
     return dataclasses.replace(
-        EngineConfig(schedule=name),
+        EngineConfig(schedule=name, placement=engine_cfg.placement),
         **{f: getattr(engine_cfg, f) for f in fields},
     )
 
@@ -227,7 +242,7 @@ def _pipelined(cfg: ModelConfig, ecfg: "EngineConfig") -> Schedule:
         raise ValueError("pipelined schedule requires an lstm_ae config")
     depth = len(cfg.lstm_ae.layer_sizes())
     devices = jax.devices()
-    data_par = max(1, ecfg.data_parallel)
+    data_par = ecfg.placement.data_shards  # data_parallel=N arrives here too (shim)
     n_stages = ecfg.n_stages or min(len(devices) // data_par, depth)
 
     if n_stages < 2:
@@ -235,8 +250,8 @@ def _pipelined(cfg: ModelConfig, ecfg: "EngineConfig") -> Schedule:
             # the caller explicitly asked for batch sharding — degrading to
             # an unsharded single-device run must not happen silently
             raise ValueError(
-                f"pipelined schedule with data_parallel={data_par} needs at "
-                f"least {2 * data_par} devices (2 stages x {data_par}), "
+                f"pipelined schedule with Placement.data({data_par}) needs "
+                f"at least {2 * data_par} devices (2 stages x {data_par}), "
                 f"have {len(devices)}"
             )
         # Single device (or a 1-stage request): the pipeline degenerates to

@@ -9,6 +9,7 @@ config knob (any name in the engine registry).
 """
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass
 from typing import Optional, Union
 
@@ -65,6 +66,23 @@ class AnomalyService:
         self.params: Params = self.api.init(jax.random.PRNGKey(seed))
         self.engine.bind(self.params)
         self.threshold: Optional[float] = None
+        # open gateways whose engine is a placement re-layout of ours (see
+        # open_gateway): weakly held so a dropped gateway is collectable,
+        # rebound on every param swap so they never serve stale params
+        self._gateways: "weakref.WeakSet" = weakref.WeakSet()
+
+    def _bind(self, params: Params) -> None:
+        """Swap ``params`` onto this service AND every open gateway engine.
+
+        A gateway opened with a different placement carries its own Engine
+        (same model, re-laid-out programs); binding only ``self.engine``
+        would leave it scoring with stale params — the contract is that
+        open gateways always read the params now in effect."""
+        self.params = params
+        self.engine.bind(params)
+        for gw in list(self._gateways):
+            if gw.engine is not self.engine:
+                gw.engine.bind(params)
 
     @property
     def features(self) -> int:
@@ -99,8 +117,7 @@ class AnomalyService:
             state, metrics = step(state, {"series": series})
             if log_every and (i % log_every == 0 or i == steps - 1):
                 print(f"step {i:4d}  mse={float(metrics['loss']):.4f}")
-        self.params = state.params
-        self.engine.bind(self.params)
+        self._bind(state.params)
         return {k: float(v) for k, v in metrics.items()}
 
     # -- calibrate --------------------------------------------------------
@@ -140,8 +157,7 @@ class AnomalyService:
         the threshold now in effect.
         """
         if params is not None:
-            self.params = params
-            self.engine.bind(params)
+            self._bind(params)
         if threshold is not _UNSET:
             self.threshold = None if threshold is None else float(threshold)
         elif benign is not None:
@@ -199,6 +215,7 @@ class AnomalyService:
         max_wait_ms: float = 5.0,
         max_queue: int = 1024,
         max_seq_len: Optional[int] = None,
+        placement: Optional["object"] = None,
         **kw,
     ) -> "object":
         """Open a streaming/micro-batching gateway over this service.
@@ -207,15 +224,23 @@ class AnomalyService:
         session pool (admit/step/evict over one compiled masked step) plus a
         shape-bucketed one-shot scoring queue (flush on ``max_batch`` or
         ``max_wait_ms``, reject past ``max_queue`` pending or ``max_seq_len``
-        timesteps).  See README §Gateway; front it with
+        timesteps).  ``placement`` (a
+        :class:`~repro.engine.placement.Placement`, or an int as shorthand
+        for ``Placement.data(n)``) shards the gateway's serving programs
+        over a data mesh — pool-slot state distributes over the mesh so
+        ``capacity`` can exceed what one device holds, and bucket flushes
+        score data-parallel; it defaults to this engine's own placement.
+        See README §Gateway / §Placement; front it with
         :class:`repro.gateway.server.GatewayServer` for socket serving.
         """
         from repro.gateway import AnomalyGateway  # lazy: gateway imports engine
 
+        # the gateway registers itself in self._gateways, so future param
+        # swaps (fit / recalibrate) rebind its engine too
         return AnomalyGateway(
             self, capacity=capacity, max_batch=max_batch,
             max_wait_ms=max_wait_ms, max_queue=max_queue,
-            max_seq_len=max_seq_len, **kw,
+            max_seq_len=max_seq_len, placement=placement, **kw,
         )
 
     # -- analytics --------------------------------------------------------

@@ -20,6 +20,15 @@ surfaces the paper's deployment needs:
 ``gateway.stats()`` surfaces the shared :class:`Telemetry` (queue depth,
 batch-fill ratio, p50/p95 latency, per-schedule throughput).
 
+Both surfaces are placement-aware: under a sharded
+:class:`~repro.engine.placement.Placement` (``open_gateway(placement=
+Placement.data(N))`` or ``AnomalyGateway(..., placement=N)``) the pool's
+slot block distributes over the data mesh (capacity scales to
+``slots_per_device x mesh_size``), bucket flushes score data-parallel
+padded to a per-device multiple, and ``stats()`` gains a ``placement``
+section with per-device slot occupancy and flush fill.  The single
+placement is a strict no-op.
+
 A live deployment fronts the gateway with the asyncio JSON-lines
 transport in :mod:`repro.gateway.server` (background pump, one pool
 session per connection) and refreshes the detector in place via
@@ -33,6 +42,7 @@ from typing import Callable, Hashable, Mapping, Optional, Sequence, Union
 import numpy as np
 
 from repro.engine.base import Engine
+from repro.engine.placement import Placement
 from repro.gateway.pool import PoolFullError, SessionPool, UnknownStreamError
 from repro.gateway.queue import GatewayOverloadedError, MicroBatcher, Ticket, bucket_for
 from repro.gateway.telemetry import Telemetry
@@ -52,6 +62,7 @@ class AnomalyGateway:
         max_wait_ms: float = 5.0,
         max_queue: int = 1024,
         max_seq_len: Optional[int] = None,
+        placement: Optional["object"] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         engine = getattr(service_or_engine, "engine", service_or_engine)
@@ -60,8 +71,27 @@ class AnomalyGateway:
                 f"expected AnomalyService or Engine, got {type(service_or_engine)!r}"
             )
         engine._require_params()  # fail fast: a gateway serves a bound model
-        self.engine = engine
         self.service = service_or_engine if service_or_engine is not engine else None
+        if placement is not None:
+            if isinstance(placement, int):  # shorthand: N -> Placement.data(N)
+                placement = Placement.data(placement)
+            if not isinstance(placement, Placement):
+                raise TypeError(
+                    f"placement must be a Placement or int, got {type(placement)!r}"
+                )
+            # re-lay the engine's programs out on the requested mesh; a
+            # matching placement returns the engine itself (strict no-op).
+            # The fronted service keeps its own engine — recalibrate()
+            # rebinds both so the two views never diverge.
+            engine = engine.with_placement(placement)
+        self.engine = engine
+        if self.service is not None:
+            # let the service rebind this gateway's engine on fit /
+            # recalibrate — a placement override gives the gateway its own
+            # Engine, which must never serve stale params
+            registry = getattr(self.service, "_gateways", None)
+            if registry is not None:
+                registry.add(self)
         self._threshold: Optional[float] = None  # used when fronting a bare Engine
         self.telemetry = Telemetry(clock=clock)
         self.pool = SessionPool(engine, capacity, telemetry=self.telemetry)
@@ -128,9 +158,16 @@ class AnomalyGateway:
         ``{"threshold": ..., "params_swapped": ...}``.
         """
         if params is not None:
-            self.engine.bind(params)
-            if self.service is not None:
-                self.service.params = params
+            # one swap path for every view: the service's _bind rebinds its
+            # own engine AND every registered gateway engine (placement
+            # overrides included), so no sibling gateway serves stale params
+            binder = getattr(self.service, "_bind", None)
+            if binder is not None:
+                binder(params)
+            else:  # fronting a bare Engine (or a duck-typed service)
+                self.engine.bind(params)
+                if self.service is not None:
+                    self.service.params = params
         if threshold is not _UNSET:
             value = None if threshold is None else float(threshold)
             if self.service is not None:
@@ -141,6 +178,11 @@ class AnomalyGateway:
         return {"threshold": self.threshold, "params_swapped": params is not None}
 
     # -- observability ----------------------------------------------------
+
+    @property
+    def placement(self) -> Placement:
+        """The device placement the gateway's serving programs run on."""
+        return self.engine.placement
 
     def stats(self) -> dict:
         out = self.telemetry.stats()
@@ -154,12 +196,25 @@ class AnomalyGateway:
             features=self.batcher.features,
             threshold=self.threshold,
         )
+        if self.placement.is_sharded:
+            # mesh-layout view: static layout + live per-device residency;
+            # the matching per-flush fill history lives in the gauges
+            # (queue.device_fill / pool.device_active).  Absent under the
+            # single placement so single-device telemetry is unchanged.
+            out["placement"] = {
+                **self.placement.describe(),
+                "slots_per_device": self.pool.slots_per_device,
+                "score_lanes": self.batcher.lanes,
+                "device_active": self.pool.per_device_active(),
+            }
         return out
 
     def __repr__(self) -> str:
+        pl = (f", placement={self.placement!r}"
+              if self.placement.is_sharded else "")
         return (f"AnomalyGateway(schedule={self.engine.schedule.tag}, "
                 f"capacity={self.pool.capacity}, active={self.pool.active}, "
-                f"queue_depth={self.batcher.queue_depth})")
+                f"queue_depth={self.batcher.queue_depth}{pl})")
 
 
 def drive_stream_churn(
@@ -203,6 +258,7 @@ __all__ = [
     "drive_stream_churn",
     "GatewayOverloadedError",
     "MicroBatcher",
+    "Placement",
     "PoolFullError",
     "SessionPool",
     "Telemetry",

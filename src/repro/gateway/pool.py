@@ -7,11 +7,22 @@ sums — stepped by ONE compiled masked program regardless of which logical
 streams are resident.  Admission/eviction only touches host-side slot
 maps and zeroes the slot's state rows, so stream churn never retraces.
 
-Semantics contract (equivalence-tested in tests/test_gateway.py): a
-stream admitted to a slot and stepped through any interleaving of pool
-steps observes exactly the per-timestep running errors it would see alone
-through ``AnomalyService.stream_step`` — batch rows are independent
-through the LSTM cell, and unmasked slots carry their state unchanged.
+Under a sharded :class:`~repro.engine.placement.Placement` the slot block
+itself distributes over the data mesh axis — contiguous row blocks of
+``slots_per_device`` slots per device — so capacity scales to
+``slots_per_device x mesh_size`` instead of what one device holds.  The
+masked step is jitted with explicit in/out shardings (state in, state out
+keep the row layout; params replicate), admission balances new streams
+onto the least-loaded device, and per-device occupancy is gauged as
+``pool.device_active`` so mesh imbalance is observable.  The single
+placement is a strict no-op: programs, values and telemetry are unchanged.
+
+Semantics contract (equivalence-tested in tests/test_gateway.py and, for
+the sharded layout, tests/test_placement.py): a stream admitted to a slot
+and stepped through any interleaving of pool steps observes exactly the
+per-timestep running errors it would see alone through
+``AnomalyService.stream_step`` — batch rows are independent through the
+LSTM cell, and unmasked slots carry their state unchanged.
 """
 from __future__ import annotations
 
@@ -55,12 +66,32 @@ class SessionPool:
         self.capacity = capacity
         self.features = engine.cfg.lstm_ae.input_features
         self.telemetry = telemetry or Telemetry()
+        # the pool always lays its block out on the ENGINE's placement —
+        # the masked-step programs and the slot state must agree on one
+        # layout (re-place via Engine.with_placement, not a pool knob)
+        self.placement = engine.placement
+        # the state block pads up to a per-device multiple; the padding rows
+        # are never admitted (logical capacity stays exactly ``capacity``)
+        self._block = self.placement.pad_rows(capacity)
+        self.slots_per_device = self._block // self.placement.data_shards
 
-        self._state = engine.init_stream_state(capacity)
-        self._sq_sum = jnp.zeros((capacity,), jnp.float32)
-        self._steps = jnp.zeros((capacity,), jnp.int32)
+        self._state = engine.init_stream_state(self._block)
+        self._sq_sum = jnp.zeros((self._block,), jnp.float32)
+        self._steps = jnp.zeros((self._block,), jnp.int32)
         self._slot_of: dict[Hashable, int] = {}
-        self._free: list[int] = list(range(capacity))[::-1]
+        # per-device free stacks + active counters: admission picks the
+        # least-loaded device in O(devices), pops its stack in O(1) —
+        # churn-heavy serving must not walk the resident map per admit.
+        # Stacks hold only logical slots (< capacity); descending order so
+        # pop() yields the lowest slot id first, matching the PR-2 order
+        # bit for bit on a single device.
+        self._free_count = capacity
+        self._free_by_dev: list[list[int]] = [
+            [] for _ in range(self.placement.data_shards)
+        ]
+        for slot in range(capacity - 1, -1, -1):
+            self._free_by_dev[slot // self.slots_per_device].append(slot)
+        self._active_by_dev = [0] * self.placement.data_shards
 
         def _pool_step(params, x, state, mask, sq_sum, steps):
             # one fused program: masked cell step + masked error accumulate
@@ -78,8 +109,29 @@ class SessionPool:
             return state, sq_sum.at[slot].set(0.0), steps.at[slot].set(0)
 
         use_jit = engine.engine_cfg.jit
-        self._pool_step = jax.jit(_pool_step) if use_jit else _pool_step
-        self._clear_slot = jax.jit(_clear_slot) if use_jit else _clear_slot
+        if use_jit and self.placement.is_sharded:
+            # slot rows live distributed over the data mesh: the fused step
+            # is compiled with explicit shardings (state in == state out, so
+            # the block never gathers between steps) and the initial block
+            # is placed shard-by-shard up front
+            rows = self.placement.row_sharding()
+            repl = self.placement.replicated_sharding()
+            self._pool_step = jax.jit(
+                _pool_step,
+                in_shardings=(repl, rows, rows, rows, rows, rows),
+                out_shardings=(rows, rows, rows),
+            )
+            self._clear_slot = jax.jit(
+                _clear_slot,
+                in_shardings=(rows, rows, rows, repl),
+                out_shardings=(rows, rows, rows),
+            )
+            self._state = jax.device_put(self._state, rows)
+            self._sq_sum = jax.device_put(self._sq_sum, rows)
+            self._steps = jax.device_put(self._steps, rows)
+        else:
+            self._pool_step = jax.jit(_pool_step) if use_jit else _pool_step
+            self._clear_slot = jax.jit(_clear_slot) if use_jit else _clear_slot
 
     # -- membership -------------------------------------------------------
 
@@ -91,17 +143,40 @@ class SessionPool:
     def resident(self) -> tuple:
         return tuple(self._slot_of)
 
+    def device_of_slot(self, slot: int) -> int:
+        """Which data shard holds ``slot`` (contiguous row blocks)."""
+        return slot // self.slots_per_device
+
+    def per_device_active(self) -> list:
+        """Resident stream count per data shard — the mesh-imbalance view
+        (a single-entry list under the single placement)."""
+        return list(self._active_by_dev)
+
+    def _pick_slot(self) -> int:
+        """Pop a free slot from the least-loaded device that has one (ties
+        broken by device order, deterministically), so resident streams
+        spread across the mesh.  O(devices) + an O(1) stack pop; on a
+        single device this is the original lowest-slot-first order bit for
+        bit."""
+        dev = min(
+            (d for d, stack in enumerate(self._free_by_dev) if stack),
+            key=lambda d: (self._active_by_dev[d], d),
+        )
+        self._free_count -= 1
+        self._active_by_dev[dev] += 1
+        return self._free_by_dev[dev].pop()
+
     def admit(self, stream_id: Hashable) -> int:
         """Claim a slot for ``stream_id`` (zeroed state); raises
         :class:`PoolFullError` when no slot is free."""
         if stream_id in self._slot_of:
             raise ValueError(f"stream {stream_id!r} is already resident")
-        if not self._free:
+        if not self._free_count:
             self.telemetry.count("pool.rejected")
             raise PoolFullError(
                 f"pool at capacity ({self.capacity}); evict a stream first"
             )
-        slot = self._free.pop()
+        slot = self._pick_slot()
         self._slot_of[stream_id] = slot
         self._zero(slot)
         self.telemetry.count("pool.admitted")
@@ -113,7 +188,10 @@ class SessionPool:
         slot = self._require(stream_id)
         final = float(self.errors()[slot])
         del self._slot_of[stream_id]
-        self._free.append(slot)
+        dev = self.device_of_slot(slot)
+        self._free_by_dev[dev].append(slot)
+        self._free_count += 1
+        self._active_by_dev[dev] -= 1
         self.telemetry.count("pool.evicted")
         self._gauge_occupancy()
         return final
@@ -121,6 +199,8 @@ class SessionPool:
     def _gauge_occupancy(self) -> None:
         self.telemetry.gauge("pool.active", self.active)
         self.telemetry.gauge("pool.occupancy", self.active / self.capacity)
+        if self.placement.is_sharded:
+            self.telemetry.gauge_vec("pool.device_active", self.per_device_active())
 
     def reset(self, stream_id: Hashable) -> None:
         """Zero a resident stream's state and error counters in place."""
@@ -151,8 +231,8 @@ class SessionPool:
         if not inputs:
             return {}
         slots = [self._require(sid) for sid in inputs]
-        x = np.zeros((self.capacity, self.features), np.float32)
-        mask = np.zeros((self.capacity,), bool)
+        x = np.zeros((self._block, self.features), np.float32)
+        mask = np.zeros((self._block,), bool)
         for sid, slot in zip(inputs, slots):
             sample = np.asarray(inputs[sid], np.float32)
             if sample.shape != (self.features,):
@@ -178,5 +258,7 @@ class SessionPool:
         return float(self.errors()[self._require(stream_id)])
 
     def __repr__(self) -> str:
+        pl = (f", placement={self.placement!r}"
+              if self.placement.is_sharded else "")
         return (f"SessionPool(capacity={self.capacity}, active={self.active}, "
-                f"schedule={self.engine.schedule.tag})")
+                f"schedule={self.engine.schedule.tag}{pl})")

@@ -6,9 +6,12 @@ the paper's inter-module FIFOs keeping the datapath fed.  Requests bucket
 by sequence length (next power-of-two ladder), pad to the bucket
 boundary, and flush when a bucket reaches ``max_batch`` or its oldest
 request has waited ``max_wait_ms``.  Every flush runs the engine's
-masked-score program on a FIXED (max_batch, bucket_T, F) shape, so each
-bucket compiles exactly once; padding lanes are masked out of the scores
-(LSTM causality makes end-padding exact, see ``Engine.score_masked``).
+masked-score program on a FIXED (lanes, bucket_T, F) shape — ``lanes`` is
+``max_batch`` rounded up to a per-device multiple of the engine's
+placement, so under a sharded placement each flush scores data-parallel
+over the mesh — and each bucket compiles exactly once; padding lanes are
+masked out of the scores (LSTM causality makes end-padding exact, see
+``Engine.score_masked``).
 
 Backpressure: ``submit`` raises :class:`GatewayOverloadedError` once
 ``max_queue`` requests are pending (admission control, not silent
@@ -154,6 +157,13 @@ class MicroBatcher:
         self.max_seq_len = max_seq_len
         self.telemetry = telemetry or Telemetry()
         self._clock = clock
+        # Sharded placements score flushes data-parallel: the fixed lane
+        # count pads max_batch up to a per-device multiple so every flush
+        # splits evenly over the mesh (the extra lanes are padding, masked
+        # out of scores like any other padding lane).  Single placement:
+        # lanes == max_batch, shapes unchanged.
+        self.placement = engine.placement
+        self.lanes = self.placement.pad_rows(max_batch)
         # bucket_T -> FIFO of (series (T,F) float32, ticket)
         self._buckets: dict[int, list[tuple[np.ndarray, Ticket]]] = {}
         self._depth = 0
@@ -242,9 +252,10 @@ class MicroBatcher:
         self._depth -= n
         self.telemetry.gauge("queue.depth", self._depth)
         try:
-            # fixed (max_batch, tb, F) shape: one compile per bucket, ever
-            x = np.zeros((self.max_batch, tb, self.features), np.float32)
-            lengths = np.ones((self.max_batch,), np.int32)  # padding lanes: 1, masked anyway
+            # fixed (lanes, tb, F) shape: one compile per bucket, ever
+            # (lanes == max_batch rounded to a per-device multiple)
+            x = np.zeros((self.lanes, tb, self.features), np.float32)
+            lengths = np.ones((self.lanes,), np.int32)  # padding lanes: 1, masked anyway
             for i, (arr, _) in enumerate(take):
                 x[i, : arr.shape[0]] = arr
                 lengths[i] = arr.shape[0]
@@ -262,7 +273,17 @@ class MicroBatcher:
             self.telemetry.observe_latency_ms((now - ticket.t_submit) * 1e3)
             ticket._resolve(float(scores[i]))
         self.telemetry.count("queue.completed", n)
-        self.telemetry.record_batch(n, self.max_batch, oldest_wait_ms)
+        self.telemetry.record_batch(n, self.lanes, oldest_wait_ms)
+        if self.placement.is_sharded:
+            # real rows pack from lane 0, so contiguous-block sharding puts
+            # device d's fill at rows [d*lpd, (d+1)*lpd) — gauge it so
+            # per-flush mesh imbalance is observable
+            lpd = self.lanes // self.placement.data_shards
+            self.telemetry.gauge_vec(
+                "queue.device_fill",
+                [min(max(n - d * lpd, 0), lpd) / lpd
+                 for d in range(self.placement.data_shards)],
+            )
         return n
 
     # -- convenience ------------------------------------------------------

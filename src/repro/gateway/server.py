@@ -35,7 +35,12 @@ request                 response
 "recalibrate",          "threshold": .., "params_swapped": false}`` —
 "threshold": ..}``      live threshold swap, resident sessions keep
                         serving (param swaps are in-process only).
-``{"op": "stats"}``     ``{"ok": true, "op": "stats", "stats": {..}}``
+``{"op": "stats"}``     ``{"ok": true, "op": "stats", "stats": {..}}`` —
+                        under a sharded placement the snapshot includes a
+                        ``placement`` section (mesh layout, per-device
+                        slot occupancy) plus ``pool.device_active`` /
+                        ``queue.device_fill`` gauges, so mesh imbalance
+                        is observable over the wire.
 ``{"op": "ping"}``      ``{"ok": true, "op": "ping"}``
 ======================  ==================================================
 

@@ -61,6 +61,13 @@ class Telemetry:
         self._touch()
         self.gauges[name] = float(value)
 
+    def gauge_vec(self, name: str, values) -> None:
+        """A per-device gauge vector (e.g. slot occupancy or flush fill per
+        mesh shard) — stored as a tuple so ``stats()`` serialises it as a
+        JSON list and mesh imbalance is observable over the wire."""
+        self._touch()
+        self.gauges[name] = tuple(float(v) for v in values)
+
     def observe_latency_ms(self, ms: float) -> None:
         self._touch()
         self._latency_ms.append(float(ms))

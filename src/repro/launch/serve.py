@@ -25,13 +25,24 @@ import numpy as np
 from repro.config import get_config, list_archs, reduced_config
 from repro.core.latency import PAPER_RH_M
 from repro.data import TimeseriesConfig, make_batch
-from repro.engine import AnomalyService, available_schedules
+from repro.engine import AnomalyService, EngineConfig, Placement, available_schedules
 from repro.models import build_model
 from repro.serving import greedy_decode_loop
 
 
+def engine_cfg_for(args) -> "object":
+    """The engine selection for this invocation: the bare schedule name,
+    or a full EngineConfig carrying the ``--mesh`` placement (e.g.
+    ``--mesh data=2`` shards pool slots and micro-batch rows 2-way)."""
+    if not args.mesh:
+        return args.schedule
+    return EngineConfig(
+        schedule=args.schedule, placement=Placement.from_spec(args.mesh)
+    )
+
+
 def serve_lstm_ae(cfg, args) -> None:
-    svc = AnomalyService(cfg, schedule=args.schedule)
+    svc = AnomalyService(cfg, schedule=engine_cfg_for(args))
     data_cfg = TimeseriesConfig(features=cfg.lstm_ae.input_features,
                                 seq_len=args.seq_len, batch=args.batch,
                                 anomaly_rate=0.05)
@@ -66,7 +77,7 @@ def serve_lstm_ae(cfg, args) -> None:
 def serve_gateway(cfg, args) -> None:
     """Drive the streaming gateway: pooled sessions with churn + a
     micro-batched one-shot request stream, then print its telemetry."""
-    svc = AnomalyService(cfg, schedule=args.schedule)
+    svc = AnomalyService(cfg, schedule=engine_cfg_for(args))
     feats = cfg.lstm_ae.input_features
     if args.train_steps:
         fit_cfg = TimeseriesConfig(features=feats, seq_len=args.seq_len, batch=64)
@@ -124,7 +135,7 @@ def serve_http(cfg, args) -> None:
     ``repro.gateway.client.GatewayClient``."""
     from repro.gateway.server import GatewayServer
 
-    svc = AnomalyService(cfg, schedule=args.schedule)
+    svc = AnomalyService(cfg, schedule=engine_cfg_for(args))
     if args.train_steps:
         fit_cfg = TimeseriesConfig(features=cfg.lstm_ae.input_features,
                                    seq_len=args.seq_len, batch=64)
@@ -137,10 +148,12 @@ def serve_http(cfg, args) -> None:
     server = GatewayServer(gw, host=args.host, port=args.port)
 
     def _ready(srv) -> None:
+        mesh = (f", mesh={gw.placement.data_shards}x{gw.placement.data_axis}"
+                if gw.placement.is_sharded else "")
         print(f"[http] listening on {srv.host}:{srv.port} "
               f"(schedule={gw.engine.schedule.tag}, capacity={gw.pool.capacity}, "
               f"max_batch={gw.batcher.max_batch}, "
-              f"max_wait_ms={gw.batcher.max_wait_ms})", flush=True)
+              f"max_wait_ms={gw.batcher.max_wait_ms}{mesh})", flush=True)
 
     import asyncio
 
@@ -194,6 +207,11 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=20)
     ap.add_argument("--schedule", default="wavefront", choices=available_schedules(),
                     help="LSTM-AE execution schedule (engine registry name)")
+    ap.add_argument("--mesh", default=None, metavar="data=N",
+                    help="device placement, e.g. 'data=2': shard gateway "
+                         "pool slots and micro-batch rows N-way over the "
+                         "data mesh axis (needs N devices; see README "
+                         "§Placement)")
     ap.add_argument("--train-steps", type=int, default=0,
                     help="fit+calibrate the detector before serving (LSTM-AE)")
     ap.add_argument("--gateway", action="store_true",

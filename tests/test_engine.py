@@ -101,11 +101,21 @@ def test_pipelined_single_device_fallback():
 
 
 def test_pipelined_data_parallel_needs_devices():
-    """An explicit data_parallel request must never silently degrade to an
-    unsharded single-device run."""
+    """An explicit data-parallel placement must never silently degrade to
+    an unsharded single-device run — and the legacy ``data_parallel=N``
+    spelling reaches the same check through the deprecation shim."""
+    from repro.engine import Placement
+
     cfg = get_config("lstm-ae-f32-d6")
-    with pytest.raises(ValueError, match="data_parallel=2"):
-        build_engine(cfg, EngineConfig(schedule="pipelined", data_parallel=2))
+    with pytest.raises(ValueError, match=r"Placement.data\(2\).*4 devices"):
+        build_engine(
+            cfg, EngineConfig(schedule="pipelined", placement=Placement.data(2))
+        )
+    with pytest.warns(DeprecationWarning, match="data_parallel=2"):
+        shim = EngineConfig(schedule="pipelined", data_parallel=2)
+    assert shim.placement == Placement.data(2)
+    with pytest.raises(ValueError, match=r"Placement.data\(2\)"):
+        build_engine(cfg, shim)
 
 
 def test_fused_schedule_uses_pallas_cell():
@@ -118,10 +128,14 @@ def test_fused_schedule_uses_pallas_cell():
 
 
 def test_resolve_cache_keyed_and_capped():
-    """Regression (ISSUE 2): EngineConfig fields a schedule declares it
-    ignores must not split the resolve cache, and resolving many distinct
-    configs must stay within the LRU cap instead of leaking executors."""
+    """Regression (ISSUE 2 + ISSUE 4): EngineConfig fields a schedule
+    declares it ignores must not split the resolve cache — EXCEPT the
+    placement, which is always part of the key so engines differing only
+    in device layout never alias one cached program — and resolving many
+    distinct configs must stay within the LRU cap instead of leaking
+    executors."""
     from repro.engine import (
+        Placement,
         Schedule,
         register_schedule,
         resolve_schedule,
@@ -134,13 +148,23 @@ def test_resolve_cache_keyed_and_capped():
     s0 = resolve_schedule("wavefront", cfg, EngineConfig(schedule="wavefront"))
     s1 = resolve_schedule(
         "wavefront", cfg,
-        EngineConfig(schedule="wavefront", n_stages=5, data_parallel=3,
-                     stage_axis="zz", jit=False),
+        EngineConfig(schedule="wavefront", n_stages=5, jit=False),
     )
     assert s0 is s1  # wavefront keys on pwl only
     assert s0 is not resolve_schedule(
         "wavefront", cfg, EngineConfig(schedule="wavefront", pwl=True)
     )
+    # placement always keys, even for schedules that ignore it (ISSUE 4:
+    # sharded and unsharded compiled programs must never collide); no mesh
+    # is built at resolve time, so a 3-way layout resolves on one device
+    s2 = resolve_schedule(
+        "wavefront", cfg,
+        EngineConfig(schedule="wavefront", placement=Placement.data(3)),
+    )
+    assert s2 is not s0
+    info = schedule_cache_info()
+    assert "placement" in info["always_keyed"]
+    assert any("Placement.data(3" in p for p in info["placements"])
 
     @register_schedule("_cache_probe")  # no config_fields: keys on everything
     def _probe(cfg, ecfg):
