@@ -1,0 +1,197 @@
+"""Benchmark regression gate: compare BENCH_*.json tables against
+committed baselines and fail CI on hot-path regressions.
+
+Four tables trend the serving stack (gateway, transport, sharding,
+workers); until this gate they were produced on every CI run and never
+compared, so a regression in the pooled step, the wire path, the sharded
+flush or the worker tier could land silently.  This script reads each
+current table, pairs it with ``benchmarks/baselines/<same name>``, and
+compares every *directional* metric:
+
+* higher-is-better — keys ending in ``_rps`` / ``_sps``, plus
+  ``speedup`` / ``relative`` / ``vs_*`` ratios (trailing ``x`` stripped):
+  FAIL when ``current < baseline - tol * max(|baseline|, 1)``
+* lower-is-better — the ``us_per_call`` column and keys ending in
+  ``_us``: FAIL when ``current > baseline + tol * max(|baseline|, 1)``
+
+Everything else in the payload (capacities, fills, device vectors,
+counts) is informational and not gated.  A row carrying an ``error``
+field in the CURRENT table fails outright; an error row in the BASELINE
+is skipped (the baseline itself was bad — re-baseline).  A row present
+in the baseline but missing from the current table fails; a new current
+row passes with a note (it needs a baseline on the next re-baseline).
+
+Usage::
+
+    python benchmarks/check.py BENCH_gateway.json BENCH_workers.json \
+        [--baseline-dir benchmarks/baselines] [--tol 0.30]
+
+Tolerance is fractional (default ±30%); CI passes a looser value because
+hosted runners vary machine-to-machine — see .github/workflows/ci.yml.
+
+Re-baselining (after an intentional perf change, on a quiet machine)::
+
+    PYTHONPATH=src python benchmarks/run.py --tables gateway_throughput \
+        --json BENCH_gateway.json     # ... and the other three tables
+    python benchmarks/check.py BENCH_*.json --update
+
+``--update`` copies the current tables over the baselines instead of
+comparing; commit the result with a note on what moved and why.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import shutil
+import sys
+from pathlib import Path
+
+_HIGHER_RE = re.compile(r"(_rps|_sps)$")
+_LOWER_RE = re.compile(r"_us$")
+
+
+def _parse_derived(derived: str) -> dict[str, float]:
+    """``k1=v1;k2=v2`` -> numeric fields (trailing ``x`` ratios included;
+    non-numeric payload entries are dropped)."""
+    out: dict[str, float] = {}
+    for part in derived.split(";"):
+        key, sep, val = part.partition("=")
+        if not sep:
+            continue
+        val = val.strip()
+        if val.endswith("x"):
+            val = val[:-1]
+        try:
+            out[key.strip()] = float(val)
+        except ValueError:
+            continue
+    return out
+
+
+def _direction(key: str) -> int:
+    """+1 higher-is-better, -1 lower-is-better, 0 not gated."""
+    if _HIGHER_RE.search(key) or key in ("speedup", "relative") \
+            or key.startswith("vs_"):
+        return +1
+    if _LOWER_RE.search(key) or key == "us_per_call":
+        return -1
+    return 0
+
+
+def _load(path: Path) -> dict[str, dict]:
+    rows = json.loads(path.read_text())
+    return {r["name"]: r for r in rows}
+
+
+def _metrics(row: dict) -> dict[str, float]:
+    out = {"us_per_call": float(row.get("us_per_call", 0.0))}
+    out.update(_parse_derived(row.get("derived", "")))
+    return out
+
+
+def check_file(current_path: Path, baseline_path: Path, tol: float) -> list:
+    """Compare one table; returns the printed comparison lines as
+    ``(status, line)`` tuples where status is PASS/FAIL/NOTE."""
+    current = _load(current_path)
+    baseline = _load(baseline_path)
+    lines: list[tuple[str, str]] = []
+    for name, base_row in baseline.items():
+        if "error" in base_row or base_row.get(
+                "derived", "").startswith("error="):
+            lines.append(("NOTE", f"{name}: baseline is an error row; "
+                          f"skipped (re-baseline)"))
+            continue
+        cur_row = current.get(name)
+        if cur_row is None:
+            lines.append(("FAIL", f"{name}: row missing from "
+                          f"{current_path.name}"))
+            continue
+        if "error" in cur_row or cur_row.get(
+                "derived", "").startswith("error="):
+            lines.append(("FAIL", f"{name}: current run errored: "
+                          f"{cur_row.get('error', cur_row.get('derived'))}"))
+            continue
+        base_m, cur_m = _metrics(base_row), _metrics(cur_row)
+        for key, base_val in sorted(base_m.items()):
+            direction = _direction(key)
+            if direction == 0:
+                continue
+            if key not in cur_m:
+                # a gated key that vanished (renamed metric, partial
+                # payload) must not silently disable its gate
+                lines.append(("FAIL", f"{name} {key}: gated key missing "
+                              f"from current row (renamed? re-baseline)"))
+                continue
+            cur_val = cur_m[key]
+            slack = tol * max(abs(base_val), 1.0)
+            regressed = (cur_val < base_val - slack if direction > 0
+                         else cur_val > base_val + slack)
+            delta = ((cur_val - base_val) / abs(base_val) * 100.0
+                     if base_val else float("inf"))
+            arrow = "^" if direction > 0 else "v"
+            lines.append((
+                "FAIL" if regressed else "PASS",
+                f"{name} {key}[{arrow}]: baseline={base_val:.4g} "
+                f"current={cur_val:.4g} ({delta:+.1f}%, tol ±{tol:.0%})",
+            ))
+    for name in current:
+        if name not in baseline:
+            lines.append(("NOTE", f"{name}: no baseline yet (new row; "
+                          f"re-baseline to start gating it)"))
+    return lines
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="gate BENCH_*.json tables against committed baselines")
+    ap.add_argument("tables", nargs="+", metavar="BENCH_*.json",
+                    help="current benchmark tables to check")
+    ap.add_argument("--baseline-dir",
+                    default=str(Path(__file__).resolve().parent / "baselines"),
+                    help="directory of committed baseline tables")
+    ap.add_argument("--tol", type=float, default=0.30,
+                    help="fractional tolerance on gated keys (default 0.30)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the current tables over the baselines "
+                         "instead of comparing (re-baseline)")
+    args = ap.parse_args()
+
+    baseline_dir = Path(args.baseline_dir)
+    if args.update:
+        baseline_dir.mkdir(parents=True, exist_ok=True)
+        for t in args.tables:
+            src = Path(t)
+            shutil.copyfile(src, baseline_dir / src.name)
+            print(f"re-baselined {baseline_dir / src.name}")
+        return 0
+
+    failures = 0
+    for t in args.tables:
+        current_path = Path(t)
+        baseline_path = baseline_dir / current_path.name
+        print(f"== {current_path.name} vs {baseline_path} ==")
+        if not current_path.exists():
+            print(f"  FAIL  current table {current_path} missing "
+                  f"(benchmark step did not produce it)")
+            failures += 1
+            continue
+        if not baseline_path.exists():
+            print(f"  NOTE  no baseline committed for {current_path.name}; "
+                  f"run with --update to create one")
+            continue
+        for status, line in check_file(current_path, baseline_path, args.tol):
+            print(f"  {status:4s}  {line}")
+            if status == "FAIL":
+                failures += 1
+    if failures:
+        print(f"\n{failures} benchmark regression(s) beyond tolerance — "
+              f"if intentional, re-baseline (see benchmarks/check.py "
+              f"docstring)")
+        return 1
+    print("\nbenchmark gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,129 @@
+"""One multi-worker-front throughput measurement (the ``gateway_workers``
+table's inner harness).
+
+Boots a :class:`repro.gateway.workers.WorkerFront` at ``--workers N``,
+drives it with ``--clients`` concurrent load-generator PROCESSES (the
+load they generate is pre-serialized JSON lines pumped over raw sockets,
+so client-side CPU never caps the measurement — the thing under test is
+the worker tier), and prints one machine-readable line::
+
+    WORKERS n=2 score_rps=1234 clients=4 requests=768 wall_s=0.62 \
+clean=2/2 dropped=0
+
+``benchmarks/run.py gateway_workers`` invokes this script once per
+worker count.  It is a standalone file rather than a ``python -c``
+string because the ``spawn`` start method must be able to re-import
+``__main__`` to unpickle the worker factory and client drivers.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import multiprocessing as mp
+import os
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+ARCH, FEATS, T_LEN = "lstm-ae-f32-d2", 32, 16
+
+
+def drive(host: str, port: int, waves: int, wave_size: int, seed: int,
+          out_q) -> None:
+    """One load-generator process: submit ``wave_size`` one-shot scores
+    per wave (pre-serialized once), read the responses, repeat.
+
+    Each wave runs on a FRESH connection: the kernel balances
+    ``SO_REUSEPORT`` listeners by hashing the connection 4-tuple, and a
+    handful of long-lived localhost connections hash badly enough to pile
+    onto one worker — reconnecting per wave (cheap on loopback) gives the
+    hash many draws, so load evens out across workers the way a real
+    many-client population would."""
+    import socket
+
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    windows = (rng.standard_normal((wave_size, T_LEN, FEATS)) * 0.1)
+    payload = b"".join(
+        json.dumps({"op": "score", "id": i,
+                    "series": w.astype(np.float32).tolist()}).encode() + b"\n"
+        for i, w in enumerate(windows)
+    )
+
+    def one_wave() -> None:
+        sock = socket.create_connection((host, port), timeout=120)
+        try:
+            rfile = sock.makefile("rb")
+            sock.sendall(payload)
+            for _ in range(wave_size):
+                line = rfile.readline()
+                if not line:
+                    raise ConnectionError("server closed mid-wave")
+                resp = json.loads(line)
+                if not resp.get("ok"):
+                    raise RuntimeError(f"score failed: {resp}")
+        finally:
+            sock.close()
+
+    one_wave()  # warm this client's path end to end
+    t0 = time.perf_counter()
+    for _ in range(waves):
+        one_wave()
+    dt = time.perf_counter() - t0
+    out_q.put((waves * wave_size, dt))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, required=True)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--waves", type=int, default=16)
+    ap.add_argument("--wave-size", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.gateway.workers import WorkerFront, default_gateway_factory
+
+    # warm_seq_len pre-compiles the score bucket in every worker before
+    # ready, so kernel connection balancing cannot land measurement
+    # traffic on a cold engine
+    factory = functools.partial(
+        default_gateway_factory, ARCH, "wavefront",
+        capacity=8, max_batch=args.wave_size, max_wait_ms=2.0,
+        max_queue=4096, warm_seq_len=T_LEN,
+    )
+    # one XLA thread per worker: the point of the table is transport-tier
+    # scaling, and letting each worker's XLA fan a tiny flush out over
+    # every core oversubscribes the box as the worker count grows
+    env = {"XLA_FLAGS": "--xla_cpu_multi_thread_eigen=false "
+                        "intra_op_parallelism_threads=1"}
+    front = WorkerFront(factory, n_workers=args.workers, env=env)
+    host, port = front.start()
+    ctx = mp.get_context("spawn")
+    out_q = ctx.Queue()
+    procs = [
+        ctx.Process(target=drive,
+                    args=(host, port, args.waves, args.wave_size,
+                          100 + i, out_q))
+        for i in range(args.clients)
+    ]
+    for p in procs:
+        p.start()
+    results = [out_q.get(timeout=600) for _ in procs]
+    for p in procs:
+        p.join(30)
+    summary = front.shutdown()
+    total = sum(n for n, _ in results)
+    wall = max(dt for _, dt in results)
+    print(f"WORKERS n={args.workers} score_rps={total / wall:.0f} "
+          f"clients={args.clients} requests={total} wall_s={wall:.2f} "
+          f"clean={summary['clean_exits']}/{summary['workers']} "
+          f"dropped={summary['dropped_tickets']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 smoke: the checks every PR must keep green.
-#   1. the full pytest suite
+#   1. the full pytest suite (skipped when SMOKE_SKIP_TESTS is set — CI
+#      runs pytest in its own `tests` job with junit/timing artifacts)
 #   2. the quickstart example (train -> calibrate -> detect via AnomalyService)
 #   3. the serving launcher on the reduced paper model
 #   4. the streaming gateway (session pool + micro-batched queue)
@@ -8,6 +9,9 @@
 #      session + a batch of one-shot scores), SIGTERM -> clean drain
 #   6. the same transport on a sharded placement (--mesh data=2 over two
 #      forced host devices): pool slots + micro-batch rows shard 2-way
+#   7. the multi-worker front (--workers 2): two concurrent clients over
+#      one SO_REUSEPORT port, SIGTERM -> every worker exits cleanly with
+#      zero dropped tickets
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -38,7 +42,9 @@ run_transport_smoke() {
   cat "$log"
 }
 
-python -m pytest -x -q
+if [ -z "${SMOKE_SKIP_TESTS:-}" ]; then
+  python -m pytest -x -q
+fi
 
 python examples/quickstart.py
 
@@ -59,5 +65,37 @@ SHARDED_LOG=$(mktemp)
 )
 grep -q "mesh=2xdata" "$SHARDED_LOG" || {
   echo "sharded server did not report its mesh"; cat "$SHARDED_LOG"; exit 1; }
+
+# multi-worker front: two worker processes behind one SO_REUSEPORT port,
+# driven by two clients at once; SIGTERM must drain BOTH workers cleanly
+# (every pending ticket answered, zero dropped) before the exit line
+WORKERS_LOG=$(mktemp)
+python -m repro.launch.serve --arch lstm-ae-f32-d2 --http --workers 2 \
+  --mesh data=1 --port 0 --train-steps 0 --capacity 8 --max-batch 8 \
+  >"$WORKERS_LOG" 2>&1 &
+WPID=$!
+trap 'kill "'"$WPID"'" 2>/dev/null || true' EXIT
+for _ in $(seq 1 300); do
+  grep -q "listening on" "$WORKERS_LOG" && break
+  kill -0 "$WPID" 2>/dev/null || { cat "$WORKERS_LOG"; exit 1; }
+  sleep 0.2
+done
+grep -q "workers=2 mesh=1xdata" "$WORKERS_LOG" || {
+  echo "worker front did not report workers/mesh"; cat "$WORKERS_LOG"; exit 1; }
+WPORT=$(sed -n 's/.*listening on [^:]*:\([0-9]*\).*/\1/p' "$WORKERS_LOG" | head -1)
+[ -n "$WPORT" ] || { echo "worker front never reported its port"; cat "$WORKERS_LOG"; exit 1; }
+
+python examples/gateway_client.py --port "$WPORT" --timesteps 12 --requests 10 &
+WC1=$!
+python examples/gateway_client.py --port "$WPORT" --timesteps 12 --requests 10 --seed 1 &
+WC2=$!
+wait "$WC1" && wait "$WC2" || { echo "worker-front client failed"; cat "$WORKERS_LOG"; exit 1; }
+
+kill -TERM "$WPID"
+wait "$WPID"   # non-zero (or hang) here == unclean shutdown, smoke fails
+trap - EXIT
+grep -q "drained: 2/2 workers exited cleanly, 0 dropped tickets" "$WORKERS_LOG" || {
+  echo "worker front did not drain every worker cleanly"; cat "$WORKERS_LOG"; exit 1; }
+cat "$WORKERS_LOG"
 
 echo "smoke OK"

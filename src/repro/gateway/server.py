@@ -40,7 +40,12 @@ request                 response
                         ``placement`` section (mesh layout, per-device
                         slot occupancy) plus ``pool.device_active`` /
                         ``queue.device_fill`` gauges, so mesh imbalance
-                        is observable over the wire.
+                        is observable over the wire.  Behind a
+                        multi-worker front (:mod:`repro.gateway.workers`)
+                        the snapshot is AGGREGATED over all workers:
+                        counters/capacities sum, and a ``workers``
+                        section carries per-worker detail plus
+                        restart/session-loss accounting.
 ``{"op": "ping"}``      ``{"ok": true, "op": "ping"}``
 ======================  ==================================================
 
@@ -104,12 +109,23 @@ class GatewayServer:
         port: int = 0,
         pump_interval_ms: Optional[float] = None,
         max_line_bytes: int = 16 << 20,
+        reuse_port: bool = False,
+        stats_provider: Optional[Callable] = None,
+        recalibrate_provider: Optional[Callable] = None,
     ):
         if not isinstance(gateway, AnomalyGateway):
             raise TypeError(f"expected AnomalyGateway, got {type(gateway)!r}")
         self.gateway = gateway
         self.host = host
         self.port = port
+        # multi-worker mode (repro.gateway.workers): several servers bind
+        # the same port with SO_REUSEPORT and the kernel load-balances
+        # connections; stats/recalibrate then answer for the whole front
+        # via the providers (which may return an awaitable — the fan-out
+        # crosses a control pipe) instead of this process's gateway alone
+        self.reuse_port = reuse_port
+        self.stats_provider = stats_provider
+        self.recalibrate_provider = recalibrate_provider
         # generous line limit: a max_seq_len x F window as JSON text is
         # ~20 bytes/float; the gateway's own admission limits do the real
         # policing, this just keeps asyncio from resetting the connection
@@ -135,8 +151,10 @@ class GatewayServer:
         if self._server is not None:
             raise RuntimeError("server already started")
         self._draining = False
+        extra = {"reuse_port": True} if self.reuse_port else {}
         self._server = await asyncio.start_server(
-            self._handle, self.host, self.port, limit=self.max_line_bytes
+            self._handle, self.host, self.port, limit=self.max_line_bytes,
+            **extra,
         )
         self.host, self.port = self._server.sockets[0].getsockname()[:2]
         self._pump_task = asyncio.get_running_loop().create_task(self._pump_loop())
@@ -413,15 +431,48 @@ class _Connection:
 
     # -- control ops -------------------------------------------------------
 
+    def _complete_async(self, op: str, awaitable, rid, wrap) -> None:
+        """Answer ``op`` from an awaitable (worker-front providers cross a
+        control pipe).  The response is written when the task completes —
+        like score tickets, possibly after later requests' responses."""
+
+        async def run() -> None:
+            try:
+                result = await awaitable
+            except Exception as exc:
+                self.send(_error_payload(op, exc), rid)
+            else:
+                self.send(wrap(result), rid)
+
+        asyncio.get_running_loop().create_task(run())
+
     def _op_recalibrate(self, req: dict, rid) -> None:
         kw = {}
         if "threshold" in req:
             kw["threshold"] = req["threshold"]
-        out = self.gateway.recalibrate(**kw)
-        self.send({"ok": True, "op": "recalibrate", **out}, rid)
+        provider = self.server.recalibrate_provider
+        if provider is None:
+            out = self.gateway.recalibrate(**kw)
+            self.send({"ok": True, "op": "recalibrate", **out}, rid)
+            return
+        # worker-front mode: the swap must reach every worker process or
+        # acceptors would disagree about alerts — fan out, then answer
+        self._complete_async(
+            "recalibrate", provider(**kw), rid,
+            lambda out: {"ok": True, "op": "recalibrate", **out},
+        )
 
     def _op_stats(self, req: dict, rid) -> None:
-        self.send({"ok": True, "op": "stats", "stats": self.gateway.stats()}, rid)
+        provider = self.server.stats_provider
+        if provider is None:
+            self.send({"ok": True, "op": "stats",
+                       "stats": self.gateway.stats()}, rid)
+            return
+        # worker-front mode: answer with the AGGREGATED front snapshot
+        self._complete_async(
+            "stats", provider(), rid,
+            lambda stats: {"ok": True, "op": "stats", "stats": stats},
+        )
 
     def _op_ping(self, req: dict, rid) -> None:
         self.send({"ok": True, "op": "ping"}, rid)

@@ -72,6 +72,16 @@ class Telemetry:
         self._touch()
         self._latency_ms.append(float(ms))
 
+    def reset(self) -> None:
+        """Zero all counters/gauges/latency history (and the uptime
+        epoch).  For drawing the line after warm-up traffic — compile
+        warming must not inflate served-request counters or fill
+        ratios."""
+        self.counters.clear()
+        self.gauges.clear()
+        self._latency_ms.clear()
+        self._t0 = None
+
     def record_batch(self, filled: int, slots: int, wait_ms: float = 0.0) -> None:
         """One micro-batch flush: ``filled`` real requests in ``slots``
         padded lanes (fill ratio = filled/slots aggregated over flushes)."""

@@ -1,0 +1,839 @@
+"""Multi-worker gateway front: N processes behind ONE listening port.
+
+The paper's accelerator replicates compute tiles until the datapath —
+not any one module — sets throughput; the serving analogue is the
+transport tier.  PR 3's :class:`~repro.gateway.server.GatewayServer`
+runs everything on one asyncio loop in one process, so past a point the
+Python transport (JSON framing + the GIL), not the compiled step, is the
+ceiling.  :class:`WorkerFront` removes that ceiling the same way the
+hardware does — by replication:
+
+* **One port, N acceptors** — the front reserves a port with
+  ``SO_REUSEPORT`` (bound, never listening, so the ephemeral port
+  survives worker churn) and forks N worker processes that each bind the
+  same address and ``listen()``; the kernel load-balances incoming
+  connections across the listening sockets.  The wire protocol is
+  byte-for-byte the PR-3 protocol — clients cannot tell one worker from
+  eight.
+* **One engine per worker** — each worker builds its own
+  ``AnomalyGateway`` (own ``Engine``, own compiled programs, own
+  ``Placement`` shard when the factory asks for one) in its own process,
+  so JAX dispatch, JSON parsing and the event loop all run N-way
+  parallel with no shared GIL.
+* **A tiny supervisor** — the parent process watches worker sentinels
+  and respawns crashed workers on the same port (``restarts`` /
+  ``sessions_lost`` account what the crash cost: the victim's
+  last-heartbeat resident-session count), fans ``stats`` /
+  ``recalibrate`` out over per-worker control pipes, and coordinates
+  SIGTERM drain — every worker answers all pending tickets before exit
+  and reports a drain summary (``dropped_tickets`` must be 0).
+
+Control-plane message shapes (one ``multiprocessing.Pipe`` per worker):
+
+  supervisor -> worker   ``{"id", "op": stats|recalibrate|shutdown|ping,
+                         "kw": {...}}`` -> ``{"id", "result"|"error"}``
+  worker -> supervisor   ``{"event": ready|heartbeat|drained|error, ...}``
+                         and ``{"wid", "op": aggregate|recalibrate_all,
+                         "kw"}`` -> ``{"wid", "result"|"error"}`` — how a
+                         wire-level ``stats``/``recalibrate`` request
+                         received by ONE worker becomes a front-wide
+                         fan-out (see ``GatewayServer.stats_provider``).
+
+Session affinity is per-connection exactly as before (the connection IS
+the stream, and a connection lives on one worker); there is no
+cross-worker session migration — a crashed worker's resident sessions
+are lost and accounted, which is the same contract an abrupt connection
+drop already had.  Workers are spawned (not forked): JAX state must
+never be forked, and ``env`` overrides (e.g. ``XLA_FLAGS`` for a
+per-worker device mesh) are applied to the environment the child boots
+with, before any JAX backend initialisation.
+"""
+from __future__ import annotations
+
+import itertools
+import logging
+import multiprocessing as mp
+import os
+import signal
+import socket
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Optional
+
+logger = logging.getLogger(__name__)
+
+_UNSET = object()
+
+
+# ---------------------------------------------------------------------------
+# worker process side
+# ---------------------------------------------------------------------------
+
+
+class _WorkerControl:
+    """Worker-side end of the control pipe, living on the worker's event
+    loop (``add_reader`` — no extra thread, so gateway calls stay on the
+    loop and the single-threaded gateway contract holds)."""
+
+    def __init__(self, conn, gateway, stop_event):
+        self.conn = conn
+        self.gateway = gateway
+        self.stop_event = stop_event
+        self._loop = None
+        self._wid = itertools.count()
+        self._futures: dict = {}
+
+    def install(self, loop) -> None:
+        self._loop = loop
+        loop.add_reader(self.conn.fileno(), self._on_readable)
+
+    def uninstall(self) -> None:
+        if self._loop is not None:
+            self._loop.remove_reader(self.conn.fileno())
+
+    def send(self, msg: dict) -> None:
+        try:
+            self.conn.send(msg)
+        except (BrokenPipeError, OSError):  # supervisor is gone; a drain
+            pass                            # is already on its way
+
+    def _on_readable(self) -> None:
+        try:
+            while self.conn.poll():
+                self._handle(self.conn.recv())
+        except (EOFError, OSError):
+            # supervisor hung up: shut down rather than serve unowned
+            self.stop_event.set()
+
+    def _handle(self, msg: dict) -> None:
+        if "wid" in msg:  # reply to a worker-initiated request
+            fut = self._futures.pop(msg["wid"], None)
+            if fut is not None and not fut.done():
+                if "error" in msg:
+                    fut.set_exception(RuntimeError(msg["error"]))
+                else:
+                    fut.set_result(msg["result"])
+            return
+        rid, op, kw = msg.get("id"), msg.get("op"), msg.get("kw", {})
+        try:
+            if op == "stats":
+                result = self.gateway.stats()  # LOCAL stats: the supervisor
+            elif op == "recalibrate":          # does the aggregation
+                result = self.gateway.recalibrate(**kw)
+            elif op == "shutdown":
+                self.stop_event.set()
+                result = {"ok": True}
+            elif op == "ping":
+                result = {"ok": True}
+            else:
+                raise ValueError(f"unknown control op {op!r}")
+            self.send({"id": rid, "result": result})
+        except Exception as exc:
+            self.send({"id": rid, "error": f"{type(exc).__name__}: {exc}"})
+
+    async def supervisor_request(self, op: str, timeout: float = 25.0, **kw):
+        """Ask the supervisor for a front-wide operation (aggregate stats,
+        fan-out recalibrate) and await its reply.  The default timeout
+        sits ABOVE the supervisor's concurrent per-worker fan-out budget
+        (15s, see ``WorkerFront._request``) so a slow sibling degrades to
+        the supervisor's partial answer, not to this worker silently
+        falling back mid-fan-out."""
+        import asyncio
+
+        wid = next(self._wid)
+        fut = self._loop.create_future()
+        self._futures[wid] = fut
+        self.send({"wid": wid, "op": op, "kw": kw})
+        try:
+            return await asyncio.wait_for(fut, timeout)
+        finally:
+            self._futures.pop(wid, None)
+
+
+def _worker_main(index: int, conn, host: str, port: int,
+                 factory: Callable, heartbeat_s: float) -> None:
+    """Entry point of one worker process: build the gateway, serve the
+    shared port, heartbeat, drain on SIGTERM/shutdown, report a summary."""
+    import asyncio
+
+    # factory() boots JAX and compiles programs — seconds during which a
+    # coordinated drain's SIGTERM would hit the default disposition and
+    # kill the worker uncleanly.  Flag boot-phase signals and honour them
+    # the moment the event loop takes over signal handling.
+    boot_stop = threading.Event()
+    for _sig in (signal.SIGINT, signal.SIGTERM):
+        signal.signal(_sig, lambda *_: boot_stop.set())
+
+    from repro.gateway.server import GatewayServer
+
+    try:
+        gateway = factory()
+    except BaseException as exc:
+        try:
+            conn.send({"event": "error",
+                       "message": f"{type(exc).__name__}: {exc}"})
+        except Exception:
+            pass
+        raise
+
+    async def _loop() -> None:
+        loop = asyncio.get_running_loop()
+        stop = asyncio.Event()
+        control = _WorkerControl(conn, gateway, stop)
+
+        async def _stats_provider():
+            # a wire-level "stats" landing on THIS worker answers for the
+            # whole front: the supervisor fans out to every worker (this
+            # one replies its local stats from the pipe reader while this
+            # coroutine awaits) and returns the aggregate.  If the
+            # supervisor cannot answer, fall back to local stats rather
+            # than failing the request.
+            try:
+                return await control.supervisor_request("aggregate")
+            except Exception:
+                logger.exception("worker %d: stats aggregation failed; "
+                                 "answering local stats", index)
+                return gateway.stats()
+
+        async def _recalibrate_provider(**kw):
+            # recalibrate must hit EVERY worker or thresholds diverge
+            # across acceptors; no local fallback — a partial recalibrate
+            # is worse than a failed one.
+            return await control.supervisor_request("recalibrate_all", **kw)
+
+        server = GatewayServer(
+            gateway, host=host, port=port, reuse_port=True,
+            stats_provider=_stats_provider,
+            recalibrate_provider=_recalibrate_provider,
+        )
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            try:
+                loop.add_signal_handler(sig, stop.set)
+            except NotImplementedError:
+                signal.signal(sig, lambda *_: stop.set())
+        if boot_stop.is_set():  # a drain already asked for us mid-boot
+            stop.set()
+        control.install(loop)
+        await server.start()
+        control.send({"event": "ready", "index": index, "port": server.port,
+                      "pid": os.getpid()})
+
+        async def _heartbeat() -> None:
+            while True:
+                control.send({
+                    "event": "heartbeat", "index": index,
+                    "active": gateway.pool.active,
+                    "queue_depth": gateway.batcher.queue_depth,
+                })
+                await asyncio.sleep(heartbeat_s)
+
+        hb = loop.create_task(_heartbeat())
+        await stop.wait()
+        hb.cancel()
+        active_before = gateway.pool.active
+        await server.drain()
+        counters = {k: float(v)
+                    for k, v in gateway.stats()["counters"].items()}
+        control.send({
+            "event": "drained", "index": index,
+            "summary": {
+                "counters": counters,
+                # the drain contract: nothing left unanswered
+                "pending_after_drain": gateway.batcher.queue_depth,
+                "active_before_drain": active_before,
+            },
+        })
+        control.uninstall()
+
+    asyncio.run(_loop())
+
+
+# ---------------------------------------------------------------------------
+# supervisor side
+# ---------------------------------------------------------------------------
+
+
+class _Worker:
+    """Supervisor-side record of one worker process (one generation)."""
+
+    def __init__(self, index: int, proc, conn):
+        self.index = index
+        self.proc = proc
+        self.conn = conn
+        self.pid: Optional[int] = None
+        self.ready = threading.Event()
+        self.error: Optional[str] = None
+        self.last_active = 0
+        self.last_queue_depth = 0
+        self.drain_summary: Optional[dict] = None
+        self.exitcode: Optional[int] = None
+        self.send_lock = threading.Lock()
+        self.pending: dict = {}  # id -> [threading.Event, payload]
+
+    def send(self, msg: dict) -> None:
+        with self.send_lock:
+            self.conn.send(msg)
+
+
+class WorkerFront:
+    """Supervise N ``GatewayServer`` worker processes behind one port.
+
+    ``factory`` is called IN each worker process to build that worker's
+    :class:`~repro.gateway.AnomalyGateway` — it must be picklable under
+    the ``spawn`` start method (a module-level function or a
+    ``functools.partial`` of one).  Each worker therefore owns a private
+    engine; a factory that lays its engine out on
+    ``Placement.from_spec("data=K")`` gives every worker its own K-device
+    mesh shard (pass ``env={"XLA_FLAGS": ...}`` to emulate devices on
+    CPU — the override is applied to the child's boot environment, ahead
+    of any JAX initialisation).
+
+    >>> front = WorkerFront(functools.partial(make_gateway), n_workers=4)
+    >>> host, port = front.start()       # same wire protocol as one server
+    >>> front.stats()                    # aggregated over the control pipes
+    >>> summary = front.shutdown()       # coordinated drain; 0 dropped
+    """
+
+    def __init__(
+        self,
+        factory: Callable,
+        *,
+        n_workers: int = 2,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        env: Optional[dict] = None,
+        heartbeat_ms: float = 250.0,
+        respawn: bool = True,
+        max_respawns: int = 8,
+    ):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        if not hasattr(socket, "SO_REUSEPORT"):
+            raise RuntimeError(
+                "WorkerFront needs SO_REUSEPORT (Linux/BSD); this platform "
+                "has no kernel-level listener load balancing"
+            )
+        self.factory = factory
+        self.n_workers = n_workers
+        self.host = host
+        self.port = port
+        self.env = dict(env or {})
+        self.heartbeat_s = heartbeat_ms / 1e3
+        self.respawn = respawn
+        self.max_respawns = max_respawns
+        self.restarts = 0
+        self.sessions_lost = 0
+        self._last_recalibrate: Optional[dict] = None
+        self._ctx = mp.get_context("spawn")  # never fork a JAX parent
+        self._workers: dict[int, _Worker] = {}
+        self._reserve: Optional[socket.socket] = None
+        self._rid = itertools.count()
+        self._lock = threading.Lock()
+        self._monitor: Optional[threading.Thread] = None
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._shutting_down = False
+        self._started = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self, ready_timeout: float = 180.0) -> tuple:
+        """Reserve the port, spawn the workers, wait until every worker's
+        server is bound; returns ``(host, port)``."""
+        if self._started:
+            raise RuntimeError("front already started")
+        self._reserve = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._reserve.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEPORT, 1)
+        self._reserve.bind((self.host, self.port))
+        self.host, self.port = self._reserve.getsockname()[:2]
+        self._started = True
+        # the executor services worker-initiated fan-outs (aggregate /
+        # recalibrate_all); it must not run them on a pipe-reader thread
+        # or the fan-out would deadlock waiting on its own reader
+        self._executor = ThreadPoolExecutor(
+            max_workers=max(2, self.n_workers), thread_name_prefix="front-ctl"
+        )
+        for i in range(self.n_workers):
+            self._spawn(i)
+        deadline = time.monotonic() + ready_timeout
+        for w in list(self._workers.values()):
+            while not w.ready.wait(0.2):
+                if not w.proc.is_alive():  # died before binding (bad
+                    w.proc.join(1.0)       # factory, import error, ...)
+                    self._abort_start(
+                        f"worker {w.index} exited with code "
+                        f"{w.proc.exitcode} before becoming ready"
+                        f"{': ' + w.error if w.error else ''}")
+                if time.monotonic() > deadline:
+                    self._abort_start(
+                        f"worker {w.index} not ready after "
+                        f"{ready_timeout:.0f}s "
+                        f"({w.error or 'no error reported'})")
+            if w.error is not None:
+                self._abort_start(f"worker {w.index} failed to start: {w.error}")
+        self._monitor = threading.Thread(
+            target=self._monitor_loop, name="front-monitor", daemon=True
+        )
+        self._monitor.start()
+        return self.host, self.port
+
+    def _abort_start(self, reason: str) -> None:
+        self._shutting_down = True
+        for w in self._workers.values():
+            if w.proc.is_alive():
+                w.proc.terminate()
+        self._close_reserve()
+        raise RuntimeError(reason)
+
+    def _spawn(self, index: int) -> None:
+        parent_conn, child_conn = self._ctx.Pipe()
+        proc = self._ctx.Process(
+            target=_worker_main,
+            args=(index, child_conn, self.host, self.port, self.factory,
+                  self.heartbeat_s),
+            name=f"gateway-worker-{index}",
+            daemon=True,
+        )
+        worker = _Worker(index, proc, parent_conn)
+        self._workers[index] = worker
+        # env overrides (XLA_FLAGS et al.) must be in the child's boot
+        # environment BEFORE any of its imports run — spawn inherits the
+        # parent environment at exec time, so apply/restore around start()
+        saved = {k: os.environ.get(k) for k in self.env}
+        try:
+            os.environ.update(self.env)
+            proc.start()
+        finally:
+            for k, v in saved.items():
+                if v is None:
+                    os.environ.pop(k, None)
+                else:
+                    os.environ[k] = v
+        child_conn.close()
+        worker.pid = proc.pid
+        threading.Thread(
+            target=self._reader_loop, args=(worker,),
+            name=f"front-reader-{index}", daemon=True,
+        ).start()
+
+    def _close_reserve(self) -> None:
+        if self._reserve is not None:
+            try:
+                self._reserve.close()
+            finally:
+                self._reserve = None
+
+    # -- supervisor threads ------------------------------------------------
+
+    def _reader_loop(self, worker: _Worker) -> None:
+        """Drain one worker's pipe: events update supervisor state,
+        replies resolve pending requests, worker-initiated requests go to
+        the executor."""
+        while True:
+            try:
+                msg = worker.conn.recv()
+            except (EOFError, OSError):
+                return
+            event = msg.get("event")
+            if event == "ready":
+                worker.pid = msg.get("pid", worker.pid)
+                worker.ready.set()
+            elif event == "heartbeat":
+                worker.last_active = int(msg.get("active", 0))
+                worker.last_queue_depth = int(msg.get("queue_depth", 0))
+            elif event == "drained":
+                worker.drain_summary = msg.get("summary")
+            elif event == "error":
+                worker.error = msg.get("message")
+                worker.ready.set()  # unblock start() with the reason
+            elif "wid" in msg:
+                if self._executor is not None:
+                    self._executor.submit(self._serve_worker_request,
+                                          worker, msg)
+            elif "id" in msg:
+                pending = worker.pending.pop(msg["id"], None)
+                if pending is not None:
+                    pending[1] = msg
+                    pending[0].set()
+
+    def _serve_worker_request(self, worker: _Worker, msg: dict) -> None:
+        """A worker asked for a front-wide operation; run the fan-out and
+        reply over its pipe."""
+        op, kw = msg.get("op"), msg.get("kw", {})
+        try:
+            if op == "aggregate":
+                result = self.stats()
+            elif op == "recalibrate_all":
+                result = self.recalibrate(**kw)
+            else:
+                raise ValueError(f"unknown front op {op!r}")
+            worker.send({"wid": msg["wid"], "result": result})
+        except Exception as exc:
+            try:
+                worker.send({"wid": msg["wid"],
+                             "error": f"{type(exc).__name__}: {exc}"})
+            except Exception:
+                pass
+
+    def _monitor_loop(self) -> None:
+        """Watch worker sentinels; respawn crashed workers (same index,
+        same port) with session-loss accounting."""
+        while not self._shutting_down:
+            sentinels = {w.proc.sentinel: w for w in self._workers.values()
+                         if w.proc.is_alive()}
+            if not sentinels:
+                time.sleep(0.05)
+                continue
+            dead = mp.connection.wait(list(sentinels), timeout=0.25)
+            for s in dead:
+                w = sentinels[s]
+                w.proc.join(1.0)
+                w.exitcode = w.proc.exitcode
+                if self._shutting_down or w.drain_summary is not None:
+                    continue  # a drained exit is handled by shutdown()
+                with self._lock:
+                    self.restarts += 1
+                    self.sessions_lost += w.last_active
+                logger.warning(
+                    "worker %d (pid %s) died with exitcode %s; %d resident "
+                    "session(s) lost; respawning",
+                    w.index, w.pid, w.exitcode, w.last_active,
+                )
+                if not self.respawn or self.restarts > self.max_respawns:
+                    logger.error("worker %d not respawned (respawn=%s, "
+                                 "restarts=%d)", w.index, self.respawn,
+                                 self.restarts)
+                    continue
+                self._spawn(w.index)
+                # do NOT block here waiting for readiness: a slow boot
+                # must not leave the other workers' crashes unwatched —
+                # a side thread waits and replays the live recalibration
+                # (a respawn rebuilds from the factory, which would
+                # otherwise quietly revert one acceptor to factory state)
+                threading.Thread(
+                    target=self._finish_respawn,
+                    args=(self._workers[w.index],),
+                    name=f"front-respawn-{w.index}", daemon=True,
+                ).start()
+
+    def _finish_respawn(self, worker: _Worker) -> None:
+        """Off the monitor thread: wait (bounded) for the respawned
+        worker and bring it back in line with the front's live state."""
+        if not worker.ready.wait(180.0):
+            logger.error("respawned worker %d never became ready",
+                         worker.index)
+            return
+        if self._last_recalibrate is None or self._shutting_down:
+            return
+        try:
+            self._request(worker, "recalibrate", **self._last_recalibrate)
+            logger.info("worker %d: replayed live recalibration after "
+                        "respawn", worker.index)
+        except Exception:
+            logger.exception("worker %d: recalibration replay failed — "
+                             "this acceptor serves factory thresholds",
+                             worker.index)
+
+    # -- control fan-out ---------------------------------------------------
+
+    def _request(self, worker: _Worker, op: str, timeout: float = 15.0,
+                 **kw) -> dict:
+        rid = next(self._rid)
+        pending = [threading.Event(), None]
+        worker.pending[rid] = pending
+        try:
+            worker.send({"id": rid, "op": op, "kw": kw})
+            if not pending[0].wait(timeout):
+                raise TimeoutError(f"worker {worker.index}: {op} timed out "
+                                   f"after {timeout:.0f}s")
+        finally:
+            worker.pending.pop(rid, None)
+        reply = pending[1]
+        if "error" in reply:
+            raise RuntimeError(f"worker {worker.index}: {reply['error']}")
+        return reply["result"]
+
+    def _fan_out(self, op: str, **kw) -> tuple[list, int]:
+        """Run ``op`` on every live worker CONCURRENTLY (wall time is the
+        slowest worker, not the sum — the worker-side aggregate await is
+        budgeted against one worker's timeout, see ``supervisor_request``);
+        returns ``(answered, attempted)`` where ``answered`` is the
+        ``(worker, result)`` pairs and ``attempted`` counts the live
+        workers asked — callers that need all-or-nothing semantics
+        (recalibrate) compare the two.  A worker mid-crash is skipped —
+        the monitor is already respawning it."""
+        targets = [w for w in self._workers.values()
+                   if w.proc.is_alive() and w.ready.is_set()]
+        slots: list = [None] * len(targets)
+
+        def _one(i: int, w: _Worker) -> None:
+            try:
+                slots[i] = (w, self._request(w, op, **kw))
+            except Exception:
+                logger.exception("worker %d: %s fan-out failed", w.index, op)
+
+        threads = [threading.Thread(target=_one, args=(i, w), daemon=True)
+                   for i, w in enumerate(targets)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return [s for s in slots if s is not None], len(targets)
+
+    @property
+    def alive_workers(self) -> int:
+        return sum(1 for w in self._workers.values() if w.proc.is_alive())
+
+    def worker_pids(self) -> list[int]:
+        return [w.pid for w in self._workers.values() if w.proc.is_alive()]
+
+    def stats(self) -> dict:
+        """Aggregated front telemetry: per-worker ``gateway.stats()``
+        snapshots (over the control pipes) plus summed pool/queue
+        counters and capacities.  ``latency_ms`` percentiles are the
+        worst worker's (exact cross-worker percentiles would need the
+        raw windows); rate keys sum."""
+        results, _ = self._fan_out("stats")
+        per_worker = []
+        for w, s in results:
+            w.last_active = int(s.get("active_streams", w.last_active))
+            per_worker.append({"index": w.index, "pid": w.pid, **s})
+        counters: dict[str, float] = {}
+        for _, s in results:
+            for k, v in s.get("counters", {}).items():
+                counters[k] = counters.get(k, 0.0) + float(v)
+        agg = {
+            "workers": {
+                "count": len(results),
+                "configured": self.n_workers,
+                "restarts": self.restarts,
+                "sessions_lost": self.sessions_lost,
+            },
+            "per_worker": per_worker,
+            "counters": counters,
+        }
+        for key in ("capacity", "active_streams", "queue_depth"):
+            agg[key] = int(sum(int(s.get(key, 0)) for _, s in results))
+        for key in ("requests_per_s", "stream_steps_per_s"):
+            agg[key] = sum(float(s.get(key, 0.0)) for _, s in results)
+        filled = counters.get("batch.filled", 0.0)
+        slots = counters.get("batch.slots", 0.0)
+        agg["batch_fill_ratio"] = filled / slots if slots else 0.0
+        if results:
+            first = results[0][1]
+            for key in ("schedule", "threshold", "features", "max_batch",
+                        "max_seq_len"):
+                agg[key] = first.get(key)
+            agg["latency_ms"] = {
+                "count": sum(int(s.get("latency_ms", {}).get("count", 0))
+                             for _, s in results),
+                "p50": max(float(s.get("latency_ms", {}).get("p50", 0.0))
+                           for _, s in results),
+                "p95": max(float(s.get("latency_ms", {}).get("p95", 0.0))
+                           for _, s in results),
+            }
+        return agg
+
+    def recalibrate(self, *, threshold=_UNSET, **kw) -> dict:
+        """Fan a live recalibration out to EVERY worker (each worker owns
+        a private engine/service, so a threshold swap must hit all of
+        them or acceptors would disagree about alerts).  All-or-error: a
+        PARTIAL application raises rather than reporting success, because
+        divergent thresholds across acceptors are worse than a failed
+        swap (retry until it answers for every worker).  The last fully
+        applied recalibration is replayed onto respawned workers so a
+        crash cannot quietly revert one acceptor to factory state."""
+        if threshold is not _UNSET:
+            kw["threshold"] = threshold
+        results, attempted = self._fan_out("recalibrate", **kw)
+        if not results:
+            raise RuntimeError("no live workers to recalibrate")
+        if len(results) < attempted:
+            raise RuntimeError(
+                f"recalibrate reached only {len(results)}/{attempted} "
+                f"workers — acceptors now disagree; retry to converge"
+            )
+        self._last_recalibrate = dict(kw)
+        # close the respawn race: a worker that became ready DURING the
+        # fan-out was not a target and _finish_respawn may have read the
+        # previous _last_recalibrate — replay onto any ready worker the
+        # fan-out missed before reporting success
+        answered = {id(w) for w, _ in results}
+        for w in list(self._workers.values()):
+            if (w.proc.is_alive() and w.ready.is_set()
+                    and id(w) not in answered):
+                try:
+                    self._request(w, "recalibrate", **kw)
+                except Exception:
+                    logger.exception("worker %d: post-fan-out recalibrate "
+                                     "replay failed", w.index)
+        out = dict(results[0][1])
+        out["workers"] = len(results)
+        return out
+
+    # -- shutdown ----------------------------------------------------------
+
+    def shutdown(self, timeout: float = 120.0) -> dict:
+        """Coordinated drain: SIGTERM every worker, wait for each to
+        answer all pending tickets and exit, aggregate the drain
+        summaries.  Returns the front summary: ``dropped_tickets`` is the
+        sum of tickets left unanswered (0 on a clean drain; a
+        force-terminated worker contributes its last-heartbeat queue
+        depth), while ``counters`` cover only CLEANLY drained workers — a
+        terminated worker's lifetime counters die with it, so on a
+        partial drain the totals undercount served traffic (the per-entry
+        ``exits`` list says which workers are covered)."""
+        if not self._started:
+            raise RuntimeError("front not started")
+        self._shutting_down = True
+        deadline = time.monotonic() + timeout
+        for w in self._workers.values():
+            if not w.proc.is_alive():
+                continue
+            # a worker still booting (e.g. just respawned) has no signal
+            # handling installed yet — give it a bounded chance to come
+            # up so its drain is clean rather than a raw SIGTERM death
+            if not w.ready.is_set():
+                w.ready.wait(min(60.0, max(0.1, deadline - time.monotonic())))
+            try:
+                os.kill(w.pid, signal.SIGTERM)
+            except (ProcessLookupError, OSError):
+                pass
+        exits = []
+        dropped = 0
+        counters: dict[str, float] = {}
+        clean = 0
+        for w in self._workers.values():
+            w.proc.join(max(0.1, deadline - time.monotonic()))
+            if w.proc.is_alive():  # a worker stuck mid-drain: last resort
+                logger.error("worker %d did not drain in time; terminating",
+                             w.index)
+                w.proc.terminate()
+                w.proc.join(5.0)
+            w.exitcode = w.proc.exitcode
+            if w.exitcode == 0 and w.drain_summary is None:
+                # the process is gone but its reader thread may not have
+                # consumed the buffered "drained" event yet — give it a
+                # beat before declaring the exit unclean
+                settle = time.monotonic() + 2.0
+                while w.drain_summary is None and time.monotonic() < settle:
+                    time.sleep(0.01)
+            summary = w.drain_summary
+            is_clean = w.exitcode == 0 and summary is not None
+            if is_clean:
+                clean += 1
+                dropped += int(summary.get("pending_after_drain", 0))
+                for k, v in summary.get("counters", {}).items():
+                    counters[k] = counters.get(k, 0.0) + float(v)
+            else:
+                # a worker that died or was force-terminated mid-drain
+                # never answered its parked tickets; its last-heartbeat
+                # queue depth is the best accounting of what it dropped
+                dropped += w.last_queue_depth
+            exits.append({
+                "index": w.index, "pid": w.pid, "exitcode": w.exitcode,
+                "clean": is_clean,
+                "pending_after_drain": (summary or {}).get(
+                    "pending_after_drain"),
+                "active_before_drain": (summary or {}).get(
+                    "active_before_drain"),
+            })
+        if self._executor is not None:
+            self._executor.shutdown(wait=False)
+            self._executor = None
+        self._close_reserve()
+        return {
+            "workers": self.n_workers,
+            "clean_exits": clean,
+            "dropped_tickets": dropped,
+            "restarts": self.restarts,
+            "sessions_lost": self.sessions_lost,
+            "counters": counters,
+            "exits": exits,
+        }
+
+    def run_until_signal(
+        self, on_ready: Optional[Callable[["WorkerFront"], None]] = None
+    ) -> dict:
+        """start() -> wait for SIGINT/SIGTERM on the supervisor ->
+        coordinated drain; returns the shutdown summary.  The launcher's
+        serve loop for ``--workers N``.
+
+        Handlers are installed BEFORE start() and stay installed through
+        the drain: a SIGTERM while workers are still booting (JAX import
+        + compile take seconds) must queue a clean shutdown, and a second
+        SIGTERM during the drain must be a no-op — not a
+        default-disposition kill that drops every pending ticket."""
+        stop = threading.Event()
+        previous = {}
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            previous[sig] = signal.signal(sig, lambda *_: stop.set())
+        try:
+            self.start()
+            if on_ready is not None:
+                on_ready(self)
+            stop.wait()
+            return self.shutdown()
+        finally:
+            for sig, handler in previous.items():
+                signal.signal(sig, handler)
+
+    def __repr__(self) -> str:
+        state = "started" if self._started else "new"
+        return (f"WorkerFront(workers={self.n_workers}, alive="
+                f"{self.alive_workers}, {self.host}:{self.port}, {state}, "
+                f"restarts={self.restarts})")
+
+
+def default_gateway_factory(
+    arch: str = "lstm-ae-f32-d2",
+    schedule: str = "wavefront",
+    *,
+    reduced: bool = False,
+    train_steps: int = 0,
+    train_seq_len: int = 64,
+    capacity: int = 32,
+    max_batch: int = 16,
+    max_wait_ms: float = 5.0,
+    max_queue: int = 1024,
+    mesh: int = 1,
+    warm_seq_len: int = 0,
+) -> "object":
+    """Picklable per-worker gateway builder (the launcher's ``--workers``,
+    benchmarks, smoke, tests).
+
+    Runs IN the worker process: builds an :class:`AnomalyService` on
+    ``schedule`` (optionally laid out on a ``mesh``-way data placement),
+    optionally fits + calibrates it — every worker re-fits
+    deterministically from the same seed, so all workers serve identical
+    params without shipping arrays across processes — and opens a
+    gateway.  ``warm_seq_len > 0`` pre-compiles that score bucket before
+    the worker reports ready, so kernel connection balancing never lands
+    traffic on a cold worker.
+    """
+    import numpy as np
+
+    from repro.config import get_config, reduced_config
+    from repro.data import TimeseriesConfig
+    from repro.engine import AnomalyService, EngineConfig, Placement
+
+    cfg = reduced_config(arch) if reduced else get_config(arch)
+    sched = (EngineConfig(schedule=schedule, placement=Placement.data(mesh))
+             if mesh > 1 else schedule)
+    svc = AnomalyService(cfg, schedule=sched)
+    if train_steps:
+        fit_cfg = TimeseriesConfig(features=svc.features,
+                                   seq_len=train_seq_len, batch=64)
+        svc.fit(fit_cfg, train_steps)
+        svc.calibrate(fit_cfg)
+    gw = svc.open_gateway(capacity=capacity, max_batch=max_batch,
+                          max_wait_ms=max_wait_ms, max_queue=max_queue)
+    if warm_seq_len > 0:
+        warm = np.zeros((max_batch, warm_seq_len, svc.features), np.float32)
+        gw.score(list(warm))
+        gw.telemetry.reset()  # warm-up is not traffic: served counters,
+        #                       fill ratios and drain summaries start at 0
+    return gw
+
+
+__all__ = ["WorkerFront", "default_gateway_factory"]

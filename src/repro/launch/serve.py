@@ -10,12 +10,20 @@ Modes, per model family:
 - LSTM-AE with ``--http``: the same gateway behind the asyncio JSON-lines
   socket transport (``--host`` / ``--port``; background pump, graceful
   drain on SIGINT/SIGTERM) — drive it with ``examples/gateway_client.py``.
+- LSTM-AE with ``--http --workers N``: the multi-worker front
+  (``repro.gateway.workers``) — N worker processes share one
+  ``SO_REUSEPORT`` port, each with its own engine (and its own
+  ``--mesh data=K`` placement shard); the supervisor respawns crashes and
+  coordinates the SIGTERM drain (every worker answers all pending
+  tickets; the exit line reports per-worker clean exits and dropped
+  tickets).
 - LM families: batched prefill + greedy decode of a few tokens (reduced
   configs on CPU; full configs need a pod mesh).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -166,6 +174,57 @@ def serve_http(cfg, args) -> None:
           f"{s['counters'].get('pool.admitted', 0):.0f} sessions", flush=True)
 
 
+def serve_workers(cfg, args) -> None:
+    """Run the multi-worker front: ``--workers N`` processes behind one
+    ``SO_REUSEPORT`` port, each worker on its own ``--mesh`` placement
+    shard, until SIGINT/SIGTERM; then coordinated drain with a per-worker
+    summary (smoke asserts every worker exits cleanly, zero dropped).
+
+    The per-worker build is ``workers.default_gateway_factory`` (runs IN
+    each worker; with ``--train-steps`` every worker re-fits
+    deterministically from the same seed, so all workers serve identical
+    params without shipping arrays across processes)."""
+    import functools
+
+    from repro.gateway.workers import WorkerFront, default_gateway_factory
+
+    mesh_ways = Placement.from_spec(args.mesh).data_shards if args.mesh else 1
+    env = {}
+    if mesh_ways > 1 and "XLA_FLAGS" not in os.environ:
+        # CPU emulation of a per-worker K-device mesh; on real hardware
+        # set XLA_FLAGS yourself and this passthrough stays out of the way
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={mesh_ways}")
+    front = WorkerFront(
+        functools.partial(
+            default_gateway_factory, args.arch, args.schedule,
+            reduced=args.reduced, train_steps=args.train_steps,
+            train_seq_len=args.seq_len, capacity=args.capacity,
+            max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+            mesh=mesh_ways, warm_seq_len=args.seq_len,
+        ),
+        n_workers=args.workers, host=args.host, port=args.port, env=env,
+    )
+
+    def _ready(f) -> None:
+        print(f"[workers] listening on {f.host}:{f.port} "
+              f"workers={args.workers} mesh={mesh_ways}xdata "
+              f"(schedule={args.schedule}, capacity={args.capacity} and "
+              f"max_batch={args.max_batch} per worker)", flush=True)
+
+    summary = front.run_until_signal(on_ready=_ready)
+    c = summary["counters"]
+    print(f"[workers] drained: {summary['clean_exits']}/{summary['workers']} "
+          f"workers exited cleanly, {summary['dropped_tickets']} dropped "
+          f"tickets, {c.get('queue.completed', 0):.0f} one-shot scores "
+          f"({c.get('queue.failed', 0):.0f} failed, "
+          f"{c.get('queue.rejected', 0):.0f} rejected), "
+          f"{c.get('pool.stream_steps', 0):.0f} stream-steps over "
+          f"{c.get('pool.admitted', 0):.0f} sessions, "
+          f"restarts={summary['restarts']}, "
+          f"sessions_lost={summary['sessions_lost']}", flush=True)
+
+
 def serve_lm(cfg, args) -> None:
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
@@ -221,6 +280,11 @@ def main() -> None:
                     help="serve the gateway over the asyncio JSON-lines "
                          "transport until SIGTERM (LSTM-AE); see README "
                          "§Transport")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="fork N gateway worker processes sharing one "
+                         "SO_REUSEPORT port (implies --http); each worker "
+                         "gets its own engine and --mesh placement shard; "
+                         "see README §Workers")
     ap.add_argument("--host", default="127.0.0.1",
                     help="transport bind host (--http)")
     ap.add_argument("--port", type=int, default=0,
@@ -240,7 +304,9 @@ def main() -> None:
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if cfg.family == "lstm_ae":
-        if args.http:
+        if args.workers:
+            serve_workers(cfg, args)
+        elif args.http:
             serve_http(cfg, args)
         elif args.gateway:
             serve_gateway(cfg, args)

@@ -1,0 +1,160 @@
+"""SIGTERM drain semantics, unit-tested (previously only the
+single-server happy path was smoke-asserted): a SIGTERM arriving while
+one-shot tickets sit in the micro-batch queue must answer EVERY pending
+ticket before the process exits — for the single ``GatewayServer``
+(``--http``) and for the multi-worker ``WorkerFront`` (``--workers``)
+alike."""
+import os
+import re
+import signal
+import socket
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from conftest import GATEWAY_ARCH as ARCH, GATEWAY_FEATS as FEATS
+from repro.gateway.client import GatewayClient
+
+_REPO = Path(__file__).resolve().parent.parent
+
+
+def _spawn_server(extra_args):
+    """Launch ``repro.launch.serve --http`` in a subprocess (a real
+    process so a real SIGTERM exercises the real drain path); returns
+    ``(proc, port)`` once the ready line is printed."""
+    import queue
+    import threading
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(_REPO / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", ARCH,
+         "--http", "--port", "0", "--train-steps", "0", "--capacity", "4",
+         # max_batch > pending and an hour-scale max_wait: nothing can
+         # flush the bucket before the SIGTERM — except the drain itself
+         "--max-batch", "64", "--max-wait-ms", "3600000", *extra_args],
+        env=env, cwd=_REPO, stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT, text=True,
+    )
+    # read stdout from a thread: a bare readline() would block past the
+    # deadline if the server hangs in boot without printing, turning a
+    # 180s fail-fast into the whole CI job's timeout.  The thread keeps
+    # collecting until EOF — `collected` (not communicate(), whose pipe
+    # this thread has drained) is the server's full output.
+    lines: "queue.Queue" = queue.Queue()
+    collected: list = []
+
+    def _pump() -> None:
+        for line in proc.stdout:
+            collected.append(line)
+            lines.put(line)
+
+    reader = threading.Thread(target=_pump, daemon=True)
+    reader.start()
+    deadline = time.monotonic() + 180.0
+    port = None
+    while time.monotonic() < deadline:
+        try:
+            line = lines.get(timeout=max(0.1, deadline - time.monotonic()))
+        except queue.Empty:
+            if proc.poll() is not None:  # died without a ready line
+                pytest.fail(f"server exited during startup "
+                            f"(rc={proc.poll()}): {''.join(collected)}")
+            break
+        if "listening on" in line:
+            port = int(line.split("listening on ")[1]
+                       .split()[0].rsplit(":", 1)[1])
+            break
+    if port is None:
+        proc.kill()
+        pytest.fail(f"server never reported its port within 180s: "
+                    f"{''.join(collected)}")
+
+    def output(timeout: float) -> str:
+        proc.wait(timeout)
+        reader.join(10.0)
+        return "".join(collected)
+
+    return proc, port, output
+
+
+@pytest.mark.parametrize("extra_args", [
+    pytest.param([], id="single-server"),
+    pytest.param(["--workers", "2"], id="worker-front"),
+])
+def test_sigterm_with_inflight_tickets_answers_everything(extra_args):
+    proc, port, output = _spawn_server(extra_args)
+    rng = np.random.default_rng(0)
+    clients, rids = [], []
+    try:
+        # two connections x three tickets: under the worker front they
+        # may land on different workers — the drain must cover all
+        for _ in range(2):
+            c = GatewayClient("127.0.0.1", port)
+            clients.append(c)
+            rids.append([
+                c.submit(rng.standard_normal(
+                    (6, FEATS)).astype(np.float32) * 0.1)
+                for _ in range(3)
+            ])
+            assert c.ping()  # same-connection ordering: the submits are
+            #                  in the server's queue before we SIGTERM
+        proc.send_signal(signal.SIGTERM)
+        for c, rs in zip(clients, rids):
+            for rid in rs:
+                resp = c.collect(rid)  # written during drain
+                assert resp["ok"] and np.isfinite(resp["score"])
+    finally:
+        for c in clients:
+            try:
+                c.close()
+            except Exception:
+                pass
+        try:
+            out = output(timeout=120)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            pytest.fail("server did not exit after SIGTERM drain")
+    assert proc.returncode == 0, out
+    assert "drained" in out
+    if extra_args:  # worker front: every worker clean, nothing dropped
+        assert "2/2 workers exited cleanly" in out
+        assert "0 dropped tickets" in out
+        assert "6 one-shot scores" in out
+
+
+@pytest.mark.skipif(not hasattr(socket, "SO_REUSEPORT"),
+                    reason="WorkerFront needs SO_REUSEPORT")
+def test_worker_front_drain_answers_streaming_session_close(tmp_path):
+    """A resident streaming session survives until the drain closes its
+    connection; its steps all answered, the server exits 0."""
+    proc, port, output = _spawn_server(["--workers", "2"])
+    try:
+        with GatewayClient("127.0.0.1", port) as c:
+            for t in range(4):
+                resp = c.step(np.zeros(FEATS, np.float32))
+                assert resp["ok"]
+            proc.send_signal(signal.SIGTERM)
+            # the drain evicts the session and closes the connection;
+            # further requests fail with a closed connection, not a hang
+            with pytest.raises((ConnectionError, OSError)):
+                for _ in range(200):
+                    c.step(np.zeros(FEATS, np.float32))
+                    time.sleep(0.05)
+    finally:
+        try:
+            out = output(timeout=120)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            pytest.fail("server did not exit after SIGTERM drain")
+    assert proc.returncode == 0, out
+    # >=4: a step can legitimately race in between the SIGTERM and the
+    # drain closing the connection
+    m = re.search(r"(\d+) stream-steps over 1 sessions", out)
+    assert m and int(m.group(1)) >= 4, out

@@ -1,0 +1,217 @@
+"""Multi-worker gateway front (repro.gateway.workers): N worker
+processes behind one SO_REUSEPORT port must be value-identical to a
+single server, survive worker crashes (respawn + session-loss
+accounting), answer stats/recalibrate front-wide, and drain under load
+with zero dropped tickets."""
+import functools
+import os
+import signal
+import socket
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import (
+    GATEWAY_ARCH as ARCH,
+    GATEWAY_FEATS as FEATS,
+    gateway_series as _series,
+    solo_stream_errors as _solo_errors,
+)
+from repro.engine import AnomalyService
+from repro.gateway.client import GatewayClient
+from repro.gateway.workers import WorkerFront
+
+pytestmark = pytest.mark.skipif(
+    not hasattr(socket, "SO_REUSEPORT"),
+    reason="WorkerFront needs SO_REUSEPORT",
+)
+
+
+def _make_gateway(capacity: int = 4, max_batch: int = 4,
+                  max_wait_ms: float = 10.0):
+    """Per-worker factory (module-level: must pickle under spawn).  Every
+    worker builds the same seed-0 service, so workers serve identical
+    params — and match this test process's oracle service."""
+    svc = AnomalyService(ARCH, schedule="wavefront")
+    return svc.open_gateway(capacity=capacity, max_batch=max_batch,
+                            max_wait_ms=max_wait_ms)
+
+
+def _wait_until(predicate, timeout: float = 90.0, interval: float = 0.05):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return False
+
+
+@pytest.fixture(scope="module")
+def svc():
+    """The in-process oracle: same arch/schedule/seed as every worker."""
+    return AnomalyService(ARCH, schedule="wavefront")
+
+
+@pytest.fixture(scope="module")
+def front():
+    f = WorkerFront(functools.partial(_make_gateway), n_workers=2,
+                    heartbeat_ms=100.0)
+    f.start(ready_timeout=180.0)
+    yield f
+    f.shutdown()
+
+
+# -- equivalence: the worker tier adds no semantics -------------------------
+
+
+def test_stream_session_matches_solo_through_front(front, svc):
+    """A streaming session through whichever worker the kernel picks is
+    value-identical to solo ``stream_step`` — replication is invisible."""
+    data = _series(0, 10)
+    solo = _solo_errors(svc, data)
+    with GatewayClient(front.host, front.port) as client:
+        for t in range(len(data)):
+            resp = client.step(data[t])
+            np.testing.assert_allclose(resp["running_error"], solo[t],
+                                       rtol=1e-5, atol=1e-5)
+        final = client.end_session()["final"]
+    np.testing.assert_allclose(final, solo[-1], rtol=1e-5, atol=1e-5)
+
+
+def test_one_shot_scores_match_direct(front, svc):
+    """One-shot scores over several connections (hashing to different
+    workers) match direct in-process ``AnomalyService.score``."""
+    windows = [_series(20 + i, L, seed=3)
+               for i, L in enumerate([5, 9, 16, 7])]
+    for _ in range(3):  # several connections: exercise >1 worker
+        with GatewayClient(front.host, front.port) as client:
+            scores = client.score_many(windows)
+        for w, s in zip(windows, scores):
+            direct = float(svc.score(jnp.asarray(w[None]))[0])
+            np.testing.assert_allclose(s, direct, rtol=1e-5, atol=1e-5)
+
+
+# -- aggregated control plane ----------------------------------------------
+
+
+def test_front_stats_aggregate_sums_workers(front):
+    with GatewayClient(front.host, front.port) as client:
+        client.score(_series(30, 6))
+        agg = client.stats()  # over the wire: one worker asks, all answer
+    assert agg["workers"]["count"] == 2
+    assert agg["workers"]["configured"] == 2
+    assert len(agg["per_worker"]) == 2
+    assert agg["capacity"] == sum(w["capacity"] for w in agg["per_worker"])
+    total_completed = sum(
+        w["counters"].get("queue.completed", 0) for w in agg["per_worker"])
+    assert agg["counters"]["queue.completed"] == total_completed >= 1
+    # supervisor-side aggregation sees the same totals
+    sup = front.stats()
+    assert sup["counters"]["queue.completed"] >= total_completed
+    assert sup["features"] == FEATS
+
+
+def test_recalibrate_fans_out_to_every_worker(front):
+    with GatewayClient(front.host, front.port) as client:
+        out = client.recalibrate(0.25)
+        assert out["threshold"] == pytest.approx(0.25)
+        assert out["workers"] == 2
+    try:
+        per = front.stats()["per_worker"]
+        assert [w["threshold"] for w in per] == [0.25, 0.25]
+        # alerts flip on whichever worker a later connection lands on
+        for _ in range(3):
+            with GatewayClient(front.host, front.port) as client:
+                resp = client.request("score",
+                                      series=_series(31, 6).tolist())
+                assert "alert" in resp
+    finally:
+        front.recalibrate(threshold=None)
+        per = front.stats()["per_worker"]
+        assert [w["threshold"] for w in per] == [None, None]
+
+
+# -- crash -> respawn with session-loss accounting --------------------------
+
+
+def test_worker_crash_respawns_and_accounts_lost_sessions():
+    f = WorkerFront(functools.partial(_make_gateway), n_workers=2,
+                    heartbeat_ms=50.0)
+    host, port = f.start(ready_timeout=180.0)
+    victim_client = GatewayClient(host, port)
+    try:
+        f.recalibrate(threshold=0.125)  # live state a respawn must inherit
+        victim_client.step(np.zeros(FEATS, np.float32))
+
+        def _find_victim():
+            for w in f.stats()["per_worker"]:
+                if w["active_streams"] == 1:
+                    return w["pid"]
+            return None
+
+        assert _wait_until(lambda: _find_victim() is not None)
+        victim_pid = _find_victim()
+        os.kill(victim_pid, signal.SIGKILL)
+        assert _wait_until(
+            lambda: f.restarts == 1 and f.alive_workers == 2, timeout=120.0
+        ), f"no respawn: restarts={f.restarts} alive={f.alive_workers}"
+        assert f.sessions_lost == 1  # the victim's resident stream
+        assert victim_pid not in f.worker_pids()
+        # the front keeps serving across the crash window
+        with GatewayClient(host, port) as client:
+            assert np.isfinite(client.score(_series(40, 6)))
+        # the respawned worker rebuilt from the factory; the supervisor
+        # must have replayed the live recalibration onto it, or acceptors
+        # would now disagree about alerts
+        assert _wait_until(
+            lambda: [w["threshold"] for w in f.stats()["per_worker"]]
+            == [0.125, 0.125], timeout=60.0,
+        ), f.stats()["per_worker"]
+        summary = f.shutdown()
+    finally:
+        try:
+            victim_client.close()
+        except Exception:
+            pass
+    assert summary["clean_exits"] == 2
+    assert summary["dropped_tickets"] == 0
+    assert summary["restarts"] == 1 and summary["sessions_lost"] == 1
+
+
+# -- coordinated drain under load ------------------------------------------
+
+
+def test_shutdown_drains_pending_tickets_across_workers():
+    """Tickets parked in several workers' queues (max_wait too long to
+    flush, max_batch too big to trigger) are all answered by the
+    coordinated drain; the summary reports zero dropped."""
+    f = WorkerFront(
+        functools.partial(_make_gateway, max_batch=64, max_wait_ms=1e9),
+        n_workers=2, heartbeat_ms=100.0,
+    )
+    host, port = f.start(ready_timeout=180.0)
+    clients = [GatewayClient(host, port) for _ in range(3)]
+    try:
+        rids = []
+        for i, c in enumerate(clients):
+            rids.append([c.submit(_series(50 + i, 6)) for _ in range(3)])
+            assert c.ping()  # same-connection ordering: submits are in
+        assert _wait_until(  # some worker's queue, nothing flushed yet
+            lambda: f.stats()["queue_depth"] == 9, timeout=30.0)
+        summary = f.shutdown()
+        assert summary["clean_exits"] == 2
+        assert summary["dropped_tickets"] == 0
+        assert summary["counters"]["queue.completed"] == 9
+        for c, rs in zip(clients, rids):
+            for rid in rs:
+                resp = c.collect(rid)  # answered at drain, before close
+                assert resp["ok"] and np.isfinite(resp["score"])
+    finally:
+        for c in clients:
+            try:
+                c.close()
+            except Exception:
+                pass
