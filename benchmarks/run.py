@@ -33,6 +33,13 @@ the table-specific payload, ';'-separated).
                        the single-loop ``w1`` by >=2x; on the 2-core CI
                        class the client+server pipeline saturates first
                        and the table trends regression, not speedup
+  gateway_durability — the durability tax: per-step cost of resident
+                       durable sessions (seq + HMAC token per step,
+                       periodic async pool snapshots) vs the same
+                       per-session stepping on a plain gateway, plus
+                       cold resume-from-snapshot latency on a second
+                       gateway sharing the store
+                       (``--json BENCH_durability.json`` in CI)
   roofline_cells     — §Roofline summary over experiments/dryrun artifacts
 
 ``--tables`` selects a subset; ``--json PATH`` additionally dumps the
@@ -503,6 +510,103 @@ def gateway_workers() -> list[str]:
     return rows
 
 
+def gateway_durability() -> list[str]:
+    """The durability tax on the streaming hot loop, and resume latency
+    (``--json BENCH_durability.json`` in CI).
+
+    ``durability.stream.*`` — ``n`` resident sessions stepped round-robin
+    the way the wire path steps them (one ``step`` per request), plain
+    gateway vs the same gateway behind :class:`DurableSessions` at a
+    200 ms snapshot interval — 5x the default cadence, so several async
+    pool snapshots land inside the timed window while staying a
+    configuration someone would actually serve at.  ``vs_plain`` is the
+    gated claim — the seq bookkeeping + per-step HMAC token + off-loop
+    snapshot copies must cost <=10% of pooled streaming throughput (the
+    tax scales with cadence: the device->host block copy is the whole
+    cost, so halving the interval doubles it).
+
+    ``durability.resume.*`` — cold token resume on a SECOND gateway
+    sharing the store: snapshot lookup from disk + slot restore + fresh
+    token, averaged over every session (the SIGKILL-failover latency a
+    reconnecting client pays before replay).
+    """
+    import tempfile
+
+    import numpy as np
+
+    from repro.engine import AnomalyService
+    from repro.gateway.durability import enable_durability
+
+    arch, feats = "lstm-ae-f32-d2", 32
+    n, rounds = 16, 128
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((rounds, n, feats)).astype(np.float32)
+    svc = AnomalyService(arch, schedule="wavefront")
+    rows = []
+
+    # Two gateways, SAME per-session traffic, measured in alternating
+    # blocks (plain / durable / plain / ...) so slow drift in the box's
+    # effective clock lands on both sides instead of on whichever path
+    # happened to run second.
+    gw = svc.open_gateway(capacity=n)
+    ids = [f"p{i}" for i in range(n)]
+    for sid in ids:
+        gw.admit(sid)
+    store = tempfile.mkdtemp(prefix="bench-durability-")
+    gw_d = svc.open_gateway(capacity=n)
+    dur = enable_durability(gw_d, store, shard="bench-0",
+                            snapshot_interval_ms=200.0)
+    sids, tokens = [], {}
+    for _ in range(n):
+        sid, tok = dur.admit()
+        sids.append(sid)
+        tokens[sid] = tok
+    gw.step({ids[0]: xs[0, 0]})   # compile both pools' masked step
+    dur.step(sids[0], xs[0, 0])
+    plain_t = durable_t = 0.0
+    block = 16
+    for start in range(0, rounds, block):
+        t0 = time.perf_counter()
+        for r in range(start, start + block):
+            for i, sid in enumerate(ids):
+                gw.step({sid: xs[r, i]})
+        plain_t += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for r in range(start, start + block):
+            for i, sid in enumerate(sids):
+                _, _, tokens[sid] = dur.step(sid, xs[r, i])
+            dur.maybe_snapshot()  # what the server pump does between flushes
+        durable_t += time.perf_counter() - t0
+    plain_sps = n * rounds / plain_t
+    durable_sps = n * rounds / durable_t
+    d = dur.describe()
+    rows.append(
+        f"durability.stream.{arch}.pool{n},{1e6 / durable_sps:.1f},"
+        f"durable_sps={durable_sps:.0f};plain_sps={plain_sps:.0f};"
+        f"vs_plain={durable_sps / plain_sps:.2f}x;"
+        f"snapshots={d['snapshots']};snapshot_bytes={d['snapshot_bytes']}"
+    )
+
+    # -- cold resume on a second gateway sharing the store -----------------
+    dur.snapshot_now(wait=True)
+    gw2 = svc.open_gateway(capacity=n)
+    dur2 = enable_durability(gw2, store, shard="bench-1")
+    dur2.resume(tokens[sids[0]])  # compile the slot-restore program
+    lat = []
+    for sid in sids[1:]:
+        t0 = time.perf_counter()
+        out = dur2.resume(tokens[sid])
+        lat.append(time.perf_counter() - t0)
+        assert out["seq"] == rounds
+    mean_us = statistics.mean(lat) * 1e6
+    rows.append(
+        f"durability.resume.{arch},{mean_us:.1f},"
+        f"resume_us={mean_us:.1f};p50_us={statistics.median(lat) * 1e6:.1f};"
+        f"sessions={len(sids) - 1};from_disk=1"
+    )
+    return rows
+
+
 def roofline_cells(dryrun_dir: str = "experiments/dryrun") -> list[str]:
     rows = []
     d = Path(dryrun_dir)
@@ -533,6 +637,7 @@ _TABLES = {
     "gateway_transport": gateway_transport,
     "gateway_sharding": gateway_sharding,
     "gateway_workers": gateway_workers,
+    "gateway_durability": gateway_durability,
     "roofline_cells": roofline_cells,
 }
 

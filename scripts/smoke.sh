@@ -12,6 +12,10 @@
 #   7. the multi-worker front (--workers 2): two concurrent clients over
 #      one SO_REUSEPORT port, SIGTERM -> every worker exits cleanly with
 #      zero dropped tickets
+#   8. durable sessions: SIGKILL a worker mid-stream, resume on the
+#      respawned front with the signed token + client replay buffer —
+#      scores must be bit-equal to an uninterrupted oracle, and the
+#      final drain must migrate the resident session (sessions_lost=0)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -97,5 +101,11 @@ trap - EXIT
 grep -q "drained: 2/2 workers exited cleanly, 0 dropped tickets" "$WORKERS_LOG" || {
   echo "worker front did not drain every worker cleanly"; cat "$WORKERS_LOG"; exit 1; }
 cat "$WORKERS_LOG"
+
+# durable sessions: the script boots its own 2-worker front with a
+# snapshot store, SIGKILLs the worker serving a live stream, resumes by
+# token on the respawned front and checks bit-equality + drain handoff
+python examples/durable_resume.py
+echo "kill-worker-resume OK"
 
 echo "smoke OK"

@@ -22,21 +22,39 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.distributed.sharding import spec_tree_to_shardings
 from repro.utils import Params
 
 
-def _flatten(tree: Params) -> dict[str, np.ndarray]:
+def _flatten(tree: Params) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    """Flatten to {path-key: host array}; returns the ORIGINAL dtype per key
+    alongside, because npz cannot round-trip ml_dtypes — bfloat16 leaves are
+    upcast to float32 on disk and must be cast back on restore (the upcast
+    is lossless, so the round trip is exact)."""
     flat = {}
+    dtypes = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(
             str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path
         )
         arr = np.asarray(leaf)
-        if arr.dtype.name == "bfloat16":  # npz cannot round-trip ml_dtypes
+        dtypes[key] = arr.dtype.name
+        if arr.dtype.name == "bfloat16":
             arr = arr.astype(np.float32)
         flat[key] = arr
-    return flat
+    return flat, dtypes
+
+
+def _saved_dtype(meta: dict, key: str, fallback) -> Any:
+    """Dtype a leaf was saved with.  Checkpoints written before the dtype
+    map existed have no ``dtypes`` entry; those fall back to the restore
+    target's dtype (the historical behavior)."""
+    name = meta.get("dtypes", {}).get(key)
+    if name is None:
+        return fallback
+    try:
+        return np.dtype(name)  # ml_dtypes registers "bfloat16" with numpy
+    except TypeError:
+        return fallback
 
 
 def save_checkpoint(directory: str | Path, step: int, state: Params,
@@ -48,13 +66,14 @@ def save_checkpoint(directory: str | Path, step: int, state: Params,
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
-    flat = _flatten(state)
+    flat, dtypes = _flatten(state)
     np.savez(tmp / "leaves.npz", **flat)
     treedef = jax.tree_util.tree_structure(state)
     meta = {
         "step": step,
         "num_leaves": len(flat),
         "keys": sorted(flat.keys()),
+        "dtypes": dtypes,
         "treedef": str(treedef),
         **(extra_meta or {}),
     }
@@ -77,6 +96,13 @@ class AsyncCheckpointer:
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+
+    @property
+    def busy(self) -> bool:
+        """True while a background save is still in flight.  Callers on a
+        latency-sensitive thread (the gateway pump) poll this to *skip* a
+        snapshot tick instead of blocking in ``save`` -> ``wait``."""
+        return self._thread is not None and self._thread.is_alive()
 
     def save(self, step: int, state: Params, extra_meta: Optional[dict] = None):
         self.wait()
@@ -154,10 +180,13 @@ def restore_checkpoint(
         arr = flat[key]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs target {leaf.shape}")
-        restored.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+        restored.append(jax.numpy.asarray(arr).astype(_saved_dtype(meta, key, leaf.dtype)))
     tree = jax.tree_util.tree_unflatten(treedef, restored)
     if mesh is not None and spec_tree is not None:
-        from repro.distributed.sharding import rules_for_mesh
+        # local import: repro.distributed.fault imports this module, so a
+        # module-scope import here would close a cycle and break whichever
+        # package happens to be imported first
+        from repro.distributed.sharding import rules_for_mesh, spec_tree_to_shardings
         shardings = spec_tree_to_shardings(mesh, rules_for_mesh(mesh), spec_tree)
         tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
     else:

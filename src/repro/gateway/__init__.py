@@ -93,6 +93,10 @@ class AnomalyGateway:
             if registry is not None:
                 registry.add(self)
         self._threshold: Optional[float] = None  # used when fronting a bare Engine
+        # session durability is opt-in: repro.gateway.durability's
+        # enable_durability() attaches a DurableSessions coordinator here
+        # and the transport/stats pick it up; None keeps PR-5 semantics
+        self.durability = None
         self.telemetry = Telemetry(clock=clock)
         self.pool = SessionPool(engine, capacity, telemetry=self.telemetry)
         self.batcher = MicroBatcher(
@@ -175,6 +179,11 @@ class AnomalyGateway:
             else:
                 self._threshold = value
         self.telemetry.count("gateway.recalibrated")
+        if self.durability is not None:
+            # resumption tokens carry the recalibration epoch so a client
+            # can tell its scores straddled a swap (state itself is
+            # carried through unchanged, same as for live sessions)
+            self.durability.epoch += 1
         return {"threshold": self.threshold, "params_swapped": params is not None}
 
     # -- observability ----------------------------------------------------
@@ -207,6 +216,8 @@ class AnomalyGateway:
                 "score_lanes": self.batcher.lanes,
                 "device_active": self.pool.per_device_active(),
             }
+        if self.durability is not None:
+            out["durability"] = self.durability.describe()
         return out
 
     def __repr__(self) -> str:

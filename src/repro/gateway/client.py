@@ -11,14 +11,30 @@ server's micro-batcher flushes), so the client matches responses to
 requests by ``id``: :meth:`submit` returns a request id immediately and
 :meth:`collect` blocks until that id's response has been read, parking
 any other responses it sees on the way.
+
+Durability (server-side ``enable_durability``): ``step`` responses then
+carry ``seq`` + a signed resumption ``token``, which the client tracks
+(:attr:`session_token`) alongside a bounded replay buffer of its last
+``replay_window`` samples.  After losing the connection — or the whole
+worker — open a NEW client and call :meth:`resume` with the old client's
+token/buffer: the server restores the session from its latest snapshot
+and the client transparently re-steps the buffered samples past the
+snapshot position, so scores continue exactly as if nothing died.
 """
 from __future__ import annotations
 
 import json
 import socket
+from collections import OrderedDict
 from typing import Optional, Sequence
 
 import numpy as np
+
+
+class ReplayWindowExceededError(RuntimeError):
+    """The server's snapshot is older than the oldest sample in the
+    client's replay buffer — the gap cannot be replayed.  Raise the
+    snapshot cadence or the client's ``replay_window``."""
 
 
 class GatewayClientError(RuntimeError):
@@ -42,11 +58,19 @@ class GatewayClient:
     ...     scores = [client.collect(r)["score"] for r in rids]
     """
 
-    def __init__(self, host: str = "127.0.0.1", port: int = 0, timeout: float = 30.0):
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 timeout: float = 30.0, replay_window: int = 256):
         self._sock = socket.create_connection((host, port), timeout=timeout)
         self._rfile = self._sock.makefile("rb")
         self._next_id = 0
         self._parked: dict = {}  # id -> response that arrived out of order
+        # durability bookkeeping: the freshest resumption token plus the
+        # last `replay_window` (seq -> sample) pairs, enough to re-step
+        # past any snapshot at most `replay_window` steps behind
+        self.replay_window = int(replay_window)
+        self._token: Optional[str] = None
+        self._seq = 0
+        self._replay: "OrderedDict[int, list]" = OrderedDict()
 
     # -- wire --------------------------------------------------------------
 
@@ -89,14 +113,87 @@ class GatewayClient:
 
     # -- streaming session -------------------------------------------------
 
+    @property
+    def session_token(self) -> Optional[str]:
+        """The freshest resumption token (None before the first step, or
+        on a server without durability)."""
+        return self._token
+
+    @property
+    def session_seq(self) -> int:
+        return self._seq
+
+    def replay_buffer(self) -> list:
+        """``(seq, sample)`` pairs this client could replay — hand these
+        (with :attr:`session_token`) to a NEW client's :meth:`resume`
+        when this one's connection/worker died."""
+        return [(seq, list(x)) for seq, x in self._replay.items()]
+
+    def _track(self, resp: dict, x: list) -> dict:
+        if "token" in resp:
+            self._token = resp["token"]
+            self._seq = int(resp.get("seq", self._seq))
+            if x is not None:
+                self._replay[self._seq] = x
+                while len(self._replay) > self.replay_window:
+                    self._replay.popitem(last=False)
+        return resp
+
     def step(self, x_t) -> dict:
         """Advance this connection's pool session one timestep; returns the
-        response (``running_error`` and, when calibrated, ``alert``)."""
-        return self.request("step", x=np.asarray(x_t, np.float32).tolist())
+        response (``running_error`` and, when calibrated, ``alert``; with
+        durability also ``seq`` + ``token``, tracked on the client)."""
+        x = np.asarray(x_t, np.float32).tolist()
+        return self._track(self.request("step", x=x), x)
 
     def end_session(self) -> dict:
-        """Evict the session; returns the response (``final`` score)."""
-        return self.request("close")
+        """Evict the session; returns the response (``final`` score).  On
+        a durable server this CLOSES the session — its tokens stop
+        resuming once old snapshots age out."""
+        resp = self.request("close")
+        self._token = None
+        self._seq = 0
+        self._replay.clear()
+        return resp
+
+    def resume(self, token: Optional[str] = None,
+               replay: Optional[Sequence] = None) -> dict:
+        """Revive a durable session on THIS connection from ``token``
+        (default: this client's own last token — useful after a plain
+        reconnect; pass the dead client's token/``replay_buffer()`` when
+        migrating).  Replays buffered samples newer than the server's
+        snapshot position, so the session continues exactly where the old
+        connection stopped.  Returns ``{"seq": <position after replay>,
+        "running_error": .., "replayed": <n>}``."""
+        token = self._token if token is None else token
+        if token is None:
+            raise ValueError("no resumption token (pass one, or step first)")
+        entries = (list(self._replay.items()) if replay is None
+                   else [(int(s), list(x)) for s, x in replay])
+        resp = self.request("resume", token=token)
+        self._token = resp.get("token", token)
+        base = self._seq = int(resp["seq"])
+        todo = sorted((s, x) for s, x in entries if s > base)
+        if todo:
+            expect = list(range(base + 1, base + 1 + len(todo)))
+            if [s for s, _ in todo] != expect:
+                raise ReplayWindowExceededError(
+                    f"snapshot is at seq {base} but the replay buffer "
+                    f"covers {todo[0][0]}..{todo[-1][0]} — "
+                    f"{todo[0][0] - base - 1} step(s) are unrecoverable"
+                )
+        self._replay = OrderedDict(
+            (s, x) for s, x in entries if s <= base
+        )
+        out = dict(resp)
+        for _, x in todo:
+            out = self.step(x)
+        return {
+            "seq": self._seq,
+            "running_error": out["running_error"],
+            "replayed": len(todo),
+            "alert": out.get("alert"),
+        }
 
     # -- one-shot scoring --------------------------------------------------
 
@@ -146,4 +243,4 @@ class GatewayClient:
         self.close()
 
 
-__all__ = ["GatewayClient", "GatewayClientError"]
+__all__ = ["GatewayClient", "GatewayClientError", "ReplayWindowExceededError"]

@@ -108,6 +108,15 @@ class SessionPool:
             state = jax.tree.map(lambda leaf: leaf.at[slot].set(0.0), state)
             return state, sq_sum.at[slot].set(0.0), steps.at[slot].set(0)
 
+        def _load_slot(state, sq_sum, steps, slot, row, sq, n):
+            # inverse of _clear_slot: write one stream's saved rows back
+            # into its slot (the durability restore path)
+            state = jax.tree.map(
+                lambda leaf, r: leaf.at[slot].set(r.astype(leaf.dtype)),
+                state, row,
+            )
+            return state, sq_sum.at[slot].set(sq), steps.at[slot].set(n)
+
         use_jit = engine.engine_cfg.jit
         if use_jit and self.placement.is_sharded:
             # slot rows live distributed over the data mesh: the fused step
@@ -126,12 +135,18 @@ class SessionPool:
                 in_shardings=(rows, rows, rows, repl),
                 out_shardings=(rows, rows, rows),
             )
+            self._load_slot = jax.jit(
+                _load_slot,
+                in_shardings=(rows, rows, rows, repl, repl, repl, repl),
+                out_shardings=(rows, rows, rows),
+            )
             self._state = jax.device_put(self._state, rows)
             self._sq_sum = jax.device_put(self._sq_sum, rows)
             self._steps = jax.device_put(self._steps, rows)
         else:
             self._pool_step = jax.jit(_pool_step) if use_jit else _pool_step
             self._clear_slot = jax.jit(_clear_slot) if use_jit else _clear_slot
+            self._load_slot = jax.jit(_load_slot) if use_jit else _load_slot
 
     # -- membership -------------------------------------------------------
 
@@ -249,6 +264,58 @@ class SessionPool:
         self.telemetry.record_pool_step(len(slots), self.capacity)
         errs = np.asarray(self.errors())
         return {sid: float(errs[slot]) for sid, slot in zip(inputs, slots)}
+
+    # -- durability export / restore --------------------------------------
+    #
+    # Snapshots read a HOST COPY of the whole block; restores write one
+    # slot's rows through a jitted setter (the mirror of ``_clear_slot``).
+    # Rows travel as plain numpy in tree-leaves order so they serialize
+    # through checkpoint/manager.py without carrying treedefs around.
+
+    def slot_of(self, stream_id: Hashable) -> int:
+        """Resident slot index of ``stream_id`` (UnknownStreamError if not)."""
+        return self._require(stream_id)
+
+    def export_block(self) -> tuple[list, np.ndarray, np.ndarray]:
+        """Host copy of the full slot block: (state leaves in tree-leaves
+        order, each ``(block, ...)``; sq_sum ``(block,)``; steps ``(block,)``).
+        This is the snapshot read — it blocks only for device->host copies,
+        never for host-side serialization."""
+        leaves = [np.asarray(l) for l in jax.tree_util.tree_leaves(self._state)]
+        return leaves, np.asarray(self._sq_sum), np.asarray(self._steps)
+
+    def export_slot(self, stream_id: Hashable) -> tuple[list, float, int]:
+        """Host copy of ONE stream's rows (state leaf rows in tree-leaves
+        order, sq_sum, steps) — the park-on-disconnect path."""
+        slot = self._require(stream_id)
+        rows = [np.asarray(l[slot]) for l in jax.tree_util.tree_leaves(self._state)]
+        return rows, float(self._sq_sum[slot]), int(self._steps[slot])
+
+    def restore(self, stream_id: Hashable, rows, sq_sum: float,
+                steps: int) -> int:
+        """Admit ``stream_id`` into a free slot and load previously exported
+        state rows + error counters into it.  ``rows`` is a sequence of
+        per-leaf arrays in tree-leaves order (as produced by
+        :meth:`export_slot` / a sliced :meth:`export_block`)."""
+        treedef = jax.tree_util.tree_structure(self._state)
+        expect = [l.shape[1:] for l in jax.tree_util.tree_leaves(self._state)]
+        rows = [np.asarray(r) for r in rows]
+        got = [r.shape for r in rows]
+        if got != expect:
+            raise ValueError(
+                f"restore rows for {stream_id!r} do not match this pool's "
+                f"state layout: got {got}, expected {expect} (arch mismatch?)"
+            )
+        row_tree = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(r) for r in rows]
+        )
+        slot = self.admit(stream_id)
+        self._state, self._sq_sum, self._steps = self._load_slot(
+            self._state, self._sq_sum, self._steps, slot, row_tree,
+            jnp.float32(sq_sum), jnp.int32(steps),
+        )
+        self.telemetry.count("pool.restored")
+        return slot
 
     def errors(self) -> jnp.ndarray:
         """Running mean error per slot (capacity,) — lazy device array."""

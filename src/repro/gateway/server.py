@@ -47,7 +47,29 @@ request                 response
                         section carries per-worker detail plus
                         restart/session-loss accounting.
 ``{"op": "ping"}``      ``{"ok": true, "op": "ping"}``
+``{"op": "resume",      ``{"ok": true, "op": "resume", "seq": ..,
+"token": ..}``          "running_error": .., "token": ..}`` — revive a
+                        durable session from its resumption token onto
+                        THIS connection (any worker of a front); the
+                        client then replays its buffered steps with
+                        ``seq`` greater than the returned position.
+``{"op": "snapshot"}``  ``{"ok": true, "op": "snapshot",
+                        "sessions": .., "bytes": ..}`` — force one
+                        synchronous durability snapshot (control op for
+                        tests/ops; the background pump snapshots on its
+                        own cadence).
 ======================  ==================================================
+
+With durability enabled (``gateway.durability`` attached via
+:func:`repro.gateway.durability.enable_durability`) every ``step``
+response additionally carries ``seq`` (the session's timestep count) and
+``token`` (a fresh signed resumption token); abrupt connection drops
+PARK the session (resumable) instead of discarding it, and ``drain()``
+takes a final handoff snapshot so rolling restarts lose zero sessions.
+``resume``/``snapshot`` against a server without durability fail with
+``ValueError``; token rejections answer with the token error class name
+(``TamperedTokenError`` / ``ExpiredTokenError`` / ``UnknownSessionError``
+/ ``SessionActiveError``) in the ``error`` field.
 
 Failures answer ``{"ok": false, "op": .., "error": "<ExceptionName>",
 "message": ..}`` on the same ``id`` — ``GatewayOverloadedError`` /
@@ -178,6 +200,14 @@ class GatewayServer:
             self.gateway.flush()  # completes pending tickets -> responses go out
         except Exception:
             logger.exception("drain: final flush failed")
+        if self.gateway.durability is not None:
+            # snapshot-handoff BEFORE sessions are evicted at connection
+            # teardown: every resident durable stream lands on disk, so a
+            # rolling restart migrates instead of losing them
+            try:
+                self.gateway.durability.handoff()
+            except Exception:
+                logger.exception("drain: durability handoff failed")
         for writer in list(self._writers):
             try:
                 if writer.can_write_eof():
@@ -276,6 +306,10 @@ class GatewayServer:
         while True:
             try:
                 self.gateway.pump()
+                if self.gateway.durability is not None:
+                    # cadence snapshots ride the pump: skip (never block)
+                    # while the previous background write is in flight
+                    self.gateway.durability.maybe_snapshot()
             except Exception:
                 logger.exception("background pump failed; queue state kept")
             await asyncio.sleep(self.pump_interval_s)
@@ -369,6 +403,17 @@ class _Connection:
 
     # -- streaming session ops --------------------------------------------
 
+    @property
+    def _durable(self):
+        """The DurableSessions coordinator IF this connection's session is
+        a durable one (durable ids are strings; legacy per-connection ids
+        are tuples, so a server whose durability was enabled mid-flight
+        never mixes the two paths on one session)."""
+        dur = self.gateway.durability
+        if dur is not None and isinstance(self.stream_id, str):
+            return dur
+        return None
+
     def _op_step(self, req: dict, rid) -> None:
         # validate the payload BEFORE admitting: a malformed first step
         # must not pin a pool slot that never serves
@@ -376,33 +421,63 @@ class _Connection:
         feats = self.gateway.pool.features
         if x.shape != (feats,):
             raise ValueError(f"expected sample shape ({feats},), got {x.shape}")
+        dur = self.gateway.durability
         if self.stream_id is None:
-            self.session_seq += 1
-            sid = ("conn", self.conn_id, self.session_seq)
-            self.gateway.admit(sid)  # PoolFullError -> error response
-            self.stream_id = sid
-        running = self.gateway.step({self.stream_id: x})[self.stream_id]
-        self.send(
-            self._alert_field({"ok": True, "op": "step", "running_error": running}, running),
-            rid,
-        )
+            if dur is not None:
+                self.stream_id, _ = dur.admit()  # PoolFullError -> error resp
+            else:
+                self.session_seq += 1
+                sid = ("conn", self.conn_id, self.session_seq)
+                self.gateway.admit(sid)
+                self.stream_id = sid
+        if self._durable is not None:
+            running, seq, token = self._durable.step(self.stream_id, x)
+            payload = {"ok": True, "op": "step", "running_error": running,
+                       "seq": seq, "token": token}
+        else:
+            running = self.gateway.step({self.stream_id: x})[self.stream_id]
+            payload = {"ok": True, "op": "step", "running_error": running}
+        self.send(self._alert_field(payload, running), rid)
 
     def _op_close(self, req: dict, rid) -> None:
         if self.stream_id is None:
             raise ValueError("no open session on this connection (step first)")
-        final = self.gateway.evict(self.stream_id)
+        if self._durable is not None:
+            final = self._durable.close(self.stream_id)  # forgotten: tokens die
+        else:
+            final = self.gateway.evict(self.stream_id)
         self.stream_id = None
         self.send(
             self._alert_field({"ok": True, "op": "close", "final": final}, final), rid
         )
 
+    def _op_resume(self, req: dict, rid) -> None:
+        dur = self.gateway.durability
+        if dur is None:
+            raise ValueError("durability is not enabled on this server")
+        if self.stream_id is not None:
+            raise ValueError(
+                "this connection already carries a session; close it "
+                "before resuming another"
+            )
+        out = dur.resume(req["token"])  # token errors -> dispatch error path
+        self.stream_id = out["sid"]
+        payload = {"ok": True, "op": "resume", "seq": out["seq"],
+                   "running_error": out["running_error"],
+                   "token": out["token"]}
+        self.send(self._alert_field(payload, out["running_error"]), rid)
+
     def end_session(self) -> None:
-        """Evict this connection's session if resident (connection
-        teardown path; the final score is unreported on abrupt drops)."""
+        """Connection teardown: a durable session is PARKED (exact state,
+        resumable by token); a legacy session is evicted (the final score
+        is unreported on abrupt drops)."""
         if self.stream_id is None:
             return
         try:
-            self.gateway.evict(self.stream_id)
+            if self._durable is not None:
+                self._durable.suspend(self.stream_id)
+            else:
+                self.gateway.evict(self.stream_id)
         except Exception:
             logger.exception("conn %d: eviction at teardown failed", self.conn_id)
         finally:
@@ -473,6 +548,13 @@ class _Connection:
             "stats", provider(), rid,
             lambda stats: {"ok": True, "op": "stats", "stats": stats},
         )
+
+    def _op_snapshot(self, req: dict, rid) -> None:
+        dur = self.gateway.durability
+        if dur is None:
+            raise ValueError("durability is not enabled on this server")
+        out = dur.snapshot_now(wait=True)  # synchronous: callers use this
+        self.send({"ok": True, "op": "snapshot", **out}, rid)  # as a barrier
 
     def _op_ping(self, req: dict, rid) -> None:
         self.send({"ok": True, "op": "ping"}, rid)

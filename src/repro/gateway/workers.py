@@ -39,14 +39,27 @@ Control-plane message shapes (one ``multiprocessing.Pipe`` per worker):
                          received by ONE worker becomes a front-wide
                          fan-out (see ``GatewayServer.stats_provider``).
 
-Session affinity is per-connection exactly as before (the connection IS
-the stream, and a connection lives on one worker); there is no
-cross-worker session migration — a crashed worker's resident sessions
-are lost and accounted, which is the same contract an abrupt connection
-drop already had.  Workers are spawned (not forked): JAX state must
-never be forked, and ``env`` overrides (e.g. ``XLA_FLAGS`` for a
-per-worker device mesh) are applied to the environment the child boots
-with, before any JAX backend initialisation.
+Session affinity is per-connection (the connection IS the stream, and a
+connection lives on one worker), but with ``store_dir`` set the front is
+DURABLE: every worker snapshots its pool block into its own shard of one
+shared :class:`~repro.gateway.durability.SessionStore`, step responses
+carry signed resumption tokens, a respawned worker adopts its dead
+predecessor's snapshot shard, and clients revive a crashed worker's
+streams on any other worker via ``resume`` — so ``sessions_lost`` counts
+only what durability explicitly does not cover.  Coordinated drain takes
+a handoff snapshot per worker first: the summary's
+``sessions_migrated``/``sessions_lost`` account every resident stream.
+
+``device_claims`` makes per-worker Placement shards an enforced
+invariant instead of a convention: the supervisor validates the claim
+map for overlap before spawning anything, and each worker registers its
+claim in the store's :class:`~repro.gateway.claims.DeviceClaimRegistry`
+at boot — two workers claiming one device is a boot error naming both.
+
+Workers are spawned (not forked): JAX state must never be forked, and
+``env`` overrides (e.g. ``XLA_FLAGS`` for a per-worker device mesh) are
+applied to the environment the child boots with, before any JAX backend
+initialisation.
 """
 from __future__ import annotations
 
@@ -120,6 +133,15 @@ class _WorkerControl:
             if op == "stats":
                 result = self.gateway.stats()  # LOCAL stats: the supervisor
             elif op == "recalibrate":          # does the aggregation
+                if kw.get("params") is not None:
+                    # params crossed the pipe as numpy leaves (picklable);
+                    # land them on-device once here so the hot pool step
+                    # never pays a per-call host->device transfer
+                    import jax
+                    import jax.numpy as jnp
+
+                    kw = dict(kw)
+                    kw["params"] = jax.tree.map(jnp.asarray, kw["params"])
                 result = self.gateway.recalibrate(**kw)
             elif op == "shutdown":
                 self.stop_event.set()
@@ -152,9 +174,12 @@ class _WorkerControl:
 
 
 def _worker_main(index: int, conn, host: str, port: int,
-                 factory: Callable, heartbeat_s: float) -> None:
-    """Entry point of one worker process: build the gateway, serve the
-    shared port, heartbeat, drain on SIGTERM/shutdown, report a summary."""
+                 factory: Callable, heartbeat_s: float,
+                 durability: Optional[dict] = None,
+                 claim: Optional[dict] = None) -> None:
+    """Entry point of one worker process: register the device claim,
+    build the gateway, attach durability, serve the shared port,
+    heartbeat, drain on SIGTERM/shutdown, report a summary."""
     import asyncio
 
     # factory() boots JAX and compiles programs — seconds during which a
@@ -167,8 +192,19 @@ def _worker_main(index: int, conn, host: str, port: int,
 
     from repro.gateway.server import GatewayServer
 
+    owner = f"worker-{index}"
     try:
+        if claim:
+            # validate-at-boot, BEFORE the expensive JAX/factory work: an
+            # overlapping claim fails the spawn with the registry's error
+            from repro.gateway.claims import DeviceClaimRegistry
+
+            DeviceClaimRegistry(claim["dir"]).claim(owner, claim["devices"])
         gateway = factory()
+        if durability:
+            from repro.gateway.durability import enable_durability
+
+            enable_durability(gateway, shard=owner, **durability)
     except BaseException as exc:
         try:
             conn.send({"event": "error",
@@ -232,7 +268,10 @@ def _worker_main(index: int, conn, host: str, port: int,
         await stop.wait()
         hb.cancel()
         active_before = gateway.pool.active
-        await server.drain()
+        await server.drain()  # durability: takes the handoff snapshot
+        handoff = (gateway.durability.last_handoff
+                   if gateway.durability is not None else None) or {}
+        migrated = int(handoff.get("sessions_migrated", 0))
         counters = {k: float(v)
                     for k, v in gateway.stats()["counters"].items()}
         control.send({
@@ -242,11 +281,22 @@ def _worker_main(index: int, conn, host: str, port: int,
                 # the drain contract: nothing left unanswered
                 "pending_after_drain": gateway.batcher.queue_depth,
                 "active_before_drain": active_before,
+                # the migration contract: with durability every resident
+                # stream lands in the handoff snapshot (lost == 0)
+                "sessions_migrated": migrated,
+                "sessions_lost": max(0, active_before - migrated),
             },
         })
         control.uninstall()
 
     asyncio.run(_loop())
+    if claim:
+        try:
+            from repro.gateway.claims import DeviceClaimRegistry
+
+            DeviceClaimRegistry(claim["dir"]).release(owner)
+        except Exception:
+            pass
 
 
 # ---------------------------------------------------------------------------
@@ -306,6 +356,13 @@ class WorkerFront:
         heartbeat_ms: float = 250.0,
         respawn: bool = True,
         max_respawns: int = 8,
+        store_dir: Optional[str] = None,
+        snapshot_interval_ms: float = 1000.0,
+        park_ttl_s: float = 900.0,
+        token_ttl_s: Optional[float] = 3600.0,
+        snapshot_keep: int = 2,
+        device_claims: Optional[dict] = None,
+        claims_dir: Optional[str] = None,
     ):
         if n_workers < 1:
             raise ValueError(f"n_workers must be >= 1, got {n_workers}")
@@ -322,8 +379,46 @@ class WorkerFront:
         self.heartbeat_s = heartbeat_ms / 1e3
         self.respawn = respawn
         self.max_respawns = max_respawns
+        # durable sessions: every worker snapshots into its own shard of
+        # one shared store; None keeps the PR-5 lose-on-crash contract
+        self.store_dir = None if store_dir is None else str(store_dir)
+        self._durability_cfg = None
+        if self.store_dir is not None:
+            self._durability_cfg = {
+                "directory": self.store_dir,
+                "snapshot_interval_ms": float(snapshot_interval_ms),
+                "park_ttl_s": float(park_ttl_s),
+                "token_ttl_s": token_ttl_s,
+                "keep": int(snapshot_keep),
+            }
+        # device-claim registry: {worker index: [device, ...]}, validated
+        # for overlap HERE (fail before any worker boots) and enforced
+        # again by each worker against the on-disk registry at boot
+        self.device_claims = None
+        self._claims_dir = None
+        if device_claims is not None:
+            from repro.gateway.claims import validate_disjoint
+
+            claims = {int(i): list(devs) for i, devs in device_claims.items()}
+            unknown = sorted(i for i in claims if not 0 <= i < n_workers)
+            if unknown:
+                raise ValueError(
+                    f"device_claims for nonexistent worker index(es) "
+                    f"{unknown} (n_workers={n_workers})"
+                )
+            validate_disjoint(
+                {f"worker-{i}": devs for i, devs in claims.items()}
+            )
+            self._claims_dir = claims_dir or self.store_dir
+            if self._claims_dir is None:
+                raise ValueError(
+                    "device_claims needs a registry directory: pass "
+                    "claims_dir= (or store_dir=, which it defaults to)"
+                )
+            self.device_claims = claims
         self.restarts = 0
         self.sessions_lost = 0
+        self.sessions_migrated = 0
         self._last_recalibrate: Optional[dict] = None
         self._ctx = mp.get_context("spawn")  # never fork a JAX parent
         self._workers: dict[int, _Worker] = {}
@@ -387,10 +482,14 @@ class WorkerFront:
 
     def _spawn(self, index: int) -> None:
         parent_conn, child_conn = self._ctx.Pipe()
+        claim = None
+        if self.device_claims is not None and index in self.device_claims:
+            claim = {"dir": self._claims_dir,
+                     "devices": self.device_claims[index]}
         proc = self._ctx.Process(
             target=_worker_main,
             args=(index, child_conn, self.host, self.port, self.factory,
-                  self.heartbeat_s),
+                  self.heartbeat_s, self._durability_cfg, claim),
             name=f"gateway-worker-{index}",
             daemon=True,
         )
@@ -491,13 +590,19 @@ class WorkerFront:
                 w.exitcode = w.proc.exitcode
                 if self._shutting_down or w.drain_summary is not None:
                     continue  # a drained exit is handled by shutdown()
+                # with a snapshot store the victim's residents are not
+                # lost — any worker can resume them from its shard — so
+                # only count them against a front running without one
+                durable = self._durability_cfg is not None
                 with self._lock:
                     self.restarts += 1
-                    self.sessions_lost += w.last_active
+                    if not durable:
+                        self.sessions_lost += w.last_active
                 logger.warning(
                     "worker %d (pid %s) died with exitcode %s; %d resident "
-                    "session(s) lost; respawning",
+                    "session(s) %s; respawning",
                     w.index, w.pid, w.exitcode, w.last_active,
+                    "resumable from snapshots" if durable else "lost",
                 )
                 if not self.respawn or self.restarts > self.max_respawns:
                     logger.error("worker %d not respawned (respawn=%s, "
@@ -608,6 +713,8 @@ class WorkerFront:
                 "configured": self.n_workers,
                 "restarts": self.restarts,
                 "sessions_lost": self.sessions_lost,
+                "sessions_migrated": self.sessions_migrated,
+                "durable": self.store_dir is not None,
             },
             "per_worker": per_worker,
             "counters": counters,
@@ -634,7 +741,7 @@ class WorkerFront:
             }
         return agg
 
-    def recalibrate(self, *, threshold=_UNSET, **kw) -> dict:
+    def recalibrate(self, *, threshold=_UNSET, params=None, **kw) -> dict:
         """Fan a live recalibration out to EVERY worker (each worker owns
         a private engine/service, so a threshold swap must hit all of
         them or acceptors would disagree about alerts).  All-or-error: a
@@ -642,9 +749,22 @@ class WorkerFront:
         divergent thresholds across acceptors are worse than a failed
         swap (retry until it answers for every worker).  The last fully
         applied recalibration is replayed onto respawned workers so a
-        crash cannot quietly revert one acceptor to factory state."""
+        crash cannot quietly revert one acceptor to factory state.
+
+        ``params`` swaps the MODEL on every worker: the pytree is copied
+        to host numpy here (a pytree of device arrays does not pickle
+        across the spawn boundary), shipped over each control pipe, and
+        landed back on-device worker-side.  Resident sessions keep their
+        slots and carried state, exactly like a threshold swap — and like
+        a threshold swap, the params replay onto respawned workers."""
         if threshold is not _UNSET:
             kw["threshold"] = threshold
+        if params is not None:
+            import jax  # local: the supervisor normally never needs jax
+
+            import numpy as np
+
+            kw["params"] = jax.tree.map(lambda x: np.asarray(x), params)
         results, attempted = self._fan_out("recalibrate", **kw)
         if not results:
             raise RuntimeError("no live workers to recalibrate")
@@ -703,6 +823,8 @@ class WorkerFront:
         dropped = 0
         counters: dict[str, float] = {}
         clean = 0
+        migrated = 0
+        drain_lost = 0
         for w in self._workers.values():
             w.proc.join(max(0.1, deadline - time.monotonic()))
             if w.proc.is_alive():  # a worker stuck mid-drain: last resort
@@ -723,6 +845,8 @@ class WorkerFront:
             if is_clean:
                 clean += 1
                 dropped += int(summary.get("pending_after_drain", 0))
+                migrated += int(summary.get("sessions_migrated", 0))
+                drain_lost += int(summary.get("sessions_lost", 0))
                 for k, v in summary.get("counters", {}).items():
                     counters[k] = counters.get(k, 0.0) + float(v)
             else:
@@ -730,6 +854,7 @@ class WorkerFront:
                 # never answered its parked tickets; its last-heartbeat
                 # queue depth is the best accounting of what it dropped
                 dropped += w.last_queue_depth
+                drain_lost += w.last_active
             exits.append({
                 "index": w.index, "pid": w.pid, "exitcode": w.exitcode,
                 "clean": is_clean,
@@ -742,12 +867,18 @@ class WorkerFront:
             self._executor.shutdown(wait=False)
             self._executor = None
         self._close_reserve()
+        self.sessions_migrated += migrated
         return {
             "workers": self.n_workers,
             "clean_exits": clean,
             "dropped_tickets": dropped,
             "restarts": self.restarts,
-            "sessions_lost": self.sessions_lost,
+            # migration accounting: with durability a clean drain reports
+            # sessions_migrated == residents and adds 0 to sessions_lost;
+            # without it, drain-dropped residents count as lost (they
+            # were, exactly as before — now it is visible)
+            "sessions_migrated": migrated,
+            "sessions_lost": self.sessions_lost + drain_lost,
             "counters": counters,
             "exits": exits,
         }

@@ -16,7 +16,9 @@ Modes, per model family:
   ``--mesh data=K`` placement shard); the supervisor respawns crashes and
   coordinates the SIGTERM drain (every worker answers all pending
   tickets; the exit line reports per-worker clean exits and dropped
-  tickets).
+  tickets).  With ``--store-dir`` both transport modes serve DURABLE
+  sessions: snapshots + signed resumption tokens, crash-resume on any
+  worker, drain-handoff (README §Durability).
 - LM families: batched prefill + greedy decode of a few tokens (reduced
   configs on CPU; full configs need a pod mesh).
 """
@@ -153,15 +155,21 @@ def serve_http(cfg, args) -> None:
               flush=True)
     gw = svc.open_gateway(capacity=args.capacity, max_batch=args.max_batch,
                           max_wait_ms=args.max_wait_ms)
+    if args.store_dir:
+        from repro.gateway.durability import enable_durability
+
+        enable_durability(gw, args.store_dir,
+                          snapshot_interval_ms=args.snapshot_interval_ms)
     server = GatewayServer(gw, host=args.host, port=args.port)
 
     def _ready(srv) -> None:
         mesh = (f", mesh={gw.placement.data_shards}x{gw.placement.data_axis}"
                 if gw.placement.is_sharded else "")
+        durable = f", store={args.store_dir}" if args.store_dir else ""
         print(f"[http] listening on {srv.host}:{srv.port} "
               f"(schedule={gw.engine.schedule.tag}, capacity={gw.pool.capacity}, "
               f"max_batch={gw.batcher.max_batch}, "
-              f"max_wait_ms={gw.batcher.max_wait_ms}{mesh})", flush=True)
+              f"max_wait_ms={gw.batcher.max_wait_ms}{mesh}{durable})", flush=True)
 
     import asyncio
 
@@ -204,6 +212,8 @@ def serve_workers(cfg, args) -> None:
             mesh=mesh_ways, warm_seq_len=args.seq_len,
         ),
         n_workers=args.workers, host=args.host, port=args.port, env=env,
+        store_dir=args.store_dir or None,
+        snapshot_interval_ms=args.snapshot_interval_ms,
     )
 
     def _ready(f) -> None:
@@ -222,6 +232,7 @@ def serve_workers(cfg, args) -> None:
           f"{c.get('pool.stream_steps', 0):.0f} stream-steps over "
           f"{c.get('pool.admitted', 0):.0f} sessions, "
           f"restarts={summary['restarts']}, "
+          f"sessions_migrated={summary.get('sessions_migrated', 0)}, "
           f"sessions_lost={summary['sessions_lost']}", flush=True)
 
 
@@ -298,6 +309,13 @@ def main() -> None:
                     help="gateway micro-batch max queueing delay")
     ap.add_argument("--streams", type=int, default=0,
                     help="gateway logical streams (default 2x capacity)")
+    ap.add_argument("--store-dir", default=None,
+                    help="enable durable sessions: snapshot pool state into "
+                         "this directory and return signed resumption "
+                         "tokens on step responses (--http / --workers; "
+                         "see README §Durability)")
+    ap.add_argument("--snapshot-interval-ms", type=float, default=1000.0,
+                    help="durability snapshot cadence (with --store-dir)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()

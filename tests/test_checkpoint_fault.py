@@ -42,6 +42,38 @@ def test_checkpoint_roundtrip_exact(tmp_path):
         assert a.dtype == b.dtype
 
 
+def test_checkpoint_bfloat16_roundtrips_via_dtype_map(tmp_path):
+    """bf16 leaves are stored upcast to float32 (npz cannot hold
+    ml_dtypes) but the ORIGINAL dtype is recorded in meta.json and wins
+    on restore — this used to silently hand back float32 when the
+    restore target didn't pin bf16 itself."""
+    import json
+
+    state = {"w": jnp.full((4, 2), 1.5, jnp.bfloat16),
+             "b": jnp.arange(3, dtype=jnp.float32)}
+    path = save_checkpoint(tmp_path, 7, state)
+    meta = json.loads((path / "meta.json").read_text())
+    assert meta["dtypes"] == {"w": "bfloat16", "b": "float32"}
+    with np.load(path / "leaves.npz") as disk:
+        assert disk["w"].dtype == np.float32  # lossless upcast on disk
+
+    # restore against a target that does NOT pin bf16: the saved dtype
+    # still wins (this was the silent-upcast bug)
+    target = {"w": jax.ShapeDtypeStruct((4, 2), jnp.float32),
+              "b": jax.ShapeDtypeStruct((3,), jnp.float32)}
+    restored, _ = restore_checkpoint(path, target)
+    assert restored["w"].dtype == jnp.bfloat16
+    assert restored["b"].dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(restored["w"], np.float32),
+                                  np.asarray(state["w"], np.float32))
+
+    # legacy checkpoint (no dtype map): fall back to the target's dtype
+    meta.pop("dtypes")
+    (path / "meta.json").write_text(json.dumps(meta))
+    legacy, _ = restore_checkpoint(path, target)
+    assert legacy["w"].dtype == jnp.float32
+
+
 def test_checkpoint_atomic_no_tmp_left(tmp_path):
     save_checkpoint(tmp_path, 1, _tiny_state())
     assert not any(p.name.endswith(".tmp") for p in tmp_path.iterdir())

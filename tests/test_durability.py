@@ -1,0 +1,425 @@
+"""Durable sessions (repro.gateway.durability + tokens + claims).
+
+The contract under test, layer by layer:
+
+* tokens — HMAC-signed resumption tokens round-trip; tampering,
+  expiry and unknown sessions are distinct, deliberate failures.
+* claims — per-worker device claims are enforced disjoint, with dead
+  owners reaped and overlaps named in the error.
+* in-process — snapshot -> restore -> replay reproduces an
+  uninterrupted run BIT-EXACTLY (the pool step is deterministic), and
+  suspended (parked) sessions resume with zero loss.
+* over the wire — SIGKILL the worker serving a live stream, resume by
+  token on the respawned front, and the full score trajectory equals a
+  solo oracle; drain migrates residents (``sessions_lost == 0``) and a
+  NEW front on the same store still resumes them.
+* control plane — ``recalibrate(params=...)`` fans out over the worker
+  pipes and survives a respawn (the supervisor replays it).
+"""
+import functools
+import os
+import signal
+import socket
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_compat import given, settings, st
+from conftest import (
+    GATEWAY_ARCH as ARCH,
+    GATEWAY_FEATS as FEATS,
+    gateway_series as _series,
+    solo_stream_errors as _solo_errors,
+)
+from repro.engine import AnomalyService
+from repro.gateway.claims import (
+    DeviceClaimError,
+    DeviceClaimRegistry,
+    validate_disjoint,
+)
+from repro.gateway.client import GatewayClient, GatewayClientError
+from repro.gateway.durability import enable_durability
+from repro.gateway.tokens import (
+    ExpiredTokenError,
+    TamperedTokenError,
+    TokenSigner,
+    load_or_create_secret,
+)
+from repro.gateway.workers import WorkerFront
+
+needs_reuseport = pytest.mark.skipif(
+    not hasattr(socket, "SO_REUSEPORT"),
+    reason="WorkerFront needs SO_REUSEPORT",
+)
+
+
+def _make_gateway(capacity: int = 4, max_batch: int = 4,
+                  max_wait_ms: float = 10.0):
+    """Per-worker factory (module-level: must pickle under spawn)."""
+    svc = AnomalyService(ARCH, schedule="wavefront")
+    return svc.open_gateway(capacity=capacity, max_batch=max_batch,
+                            max_wait_ms=max_wait_ms)
+
+
+def _wait_until(predicate, timeout: float = 120.0, interval: float = 0.05):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return False
+
+
+@pytest.fixture(scope="module")
+def svc():
+    return AnomalyService(ARCH, schedule="wavefront")
+
+
+# -- resumption tokens ------------------------------------------------------
+
+
+def test_token_roundtrip(tmp_path):
+    signer = TokenSigner(load_or_create_secret(tmp_path))
+    tok = signer.issue("s-abc", 17, epoch=3)
+    claim = signer.verify(tok)
+    assert (claim.sid, claim.seq, claim.epoch) == ("s-abc", 17, 3)
+
+
+@settings(max_examples=25)
+@given(
+    seq=st.integers(0, 2**40),
+    epoch=st.integers(0, 1000),
+    flip=st.integers(5, 40),
+)
+def test_token_any_payload_roundtrips_and_any_tamper_fails(seq, epoch, flip):
+    signer = TokenSigner(b"k" * 32)
+    tok = signer.issue("s-prop", seq, epoch)
+    claim = signer.verify(tok)
+    assert claim.seq == seq and claim.epoch == epoch
+    # flip one character anywhere in payload or signature: must not verify
+    i = min(flip, len(tok) - 1)
+    if tok[i] == ".":
+        i += 1
+    bad = tok[:i] + ("A" if tok[i] != "A" else "B") + tok[i + 1:]
+    with pytest.raises(TamperedTokenError):
+        signer.verify(bad)
+
+
+def test_token_wrong_secret_and_malformed_rejected():
+    a, b = TokenSigner(b"a" * 32), TokenSigner(b"b" * 32)
+    tok = a.issue("s-x", 1)
+    with pytest.raises(TamperedTokenError):
+        b.verify(tok)
+    for junk in ("", "rt1", "rt9.x.y", "not-a-token", None, 42):
+        with pytest.raises(TamperedTokenError):
+            a.verify(junk)
+
+
+def test_token_expiry_uses_injected_clock():
+    now = [1000.0]
+    signer = TokenSigner(b"k" * 32, ttl_s=60.0, clock=lambda: now[0])
+    tok = signer.issue("s-ttl", 5)
+    assert signer.verify(tok).seq == 5
+    now[0] += 61.0
+    with pytest.raises(ExpiredTokenError):
+        signer.verify(tok)
+    forever = TokenSigner(b"k" * 32, ttl_s=None, clock=lambda: now[0])
+    now[0] += 1e9
+    assert forever.verify(forever.issue("s-ttl", 6)).seq == 6
+
+
+def test_secret_file_is_created_once_and_private(tmp_path):
+    s1 = load_or_create_secret(tmp_path)
+    s2 = load_or_create_secret(tmp_path)
+    assert s1 == s2 and len(s1) >= 16
+    mode = os.stat(tmp_path / "token.secret").st_mode & 0o777
+    assert mode == 0o600
+    (tmp_path / "other").mkdir()
+    assert load_or_create_secret(tmp_path / "other") != s1
+
+
+# -- device-claim registry --------------------------------------------------
+
+
+def test_validate_disjoint_names_both_owners():
+    ok = {"worker-0": ("device:0",), "worker-1": ("device:1",)}
+    validate_disjoint(ok)
+    bad = {"worker-0": ("device:0", "device:1"), "worker-1": ("device:1",)}
+    with pytest.raises(DeviceClaimError) as ei:
+        validate_disjoint(bad)
+    assert "worker-0" in str(ei.value) and "worker-1" in str(ei.value)
+    assert "device:1" in str(ei.value)
+
+
+def test_registry_conflict_and_release(tmp_path):
+    reg = DeviceClaimRegistry(tmp_path)
+    reg.claim("worker-0", [0, 1])
+    with pytest.raises(DeviceClaimError) as ei:
+        reg.claim("worker-1", [1])
+    assert "worker-0" in str(ei.value)
+    reg.release("worker-0")
+    reg.claim("worker-1", [1])  # freed by release
+    assert set(reg.claims()) == {"worker-1"}
+
+
+def test_registry_reaps_dead_owner(tmp_path):
+    reg = DeviceClaimRegistry(tmp_path)
+    # a claim left behind by a PID that no longer exists must not block
+    reg.claim("worker-ghost", [2], pid=2 ** 22 + 12345)
+    reg.claim("worker-0", [2])  # reaps the ghost instead of raising
+    assert set(reg.claims()) == {"worker-0"}
+    # but the SAME owner re-claiming (respawn, same name, new pid) is fine
+    reg.claim("worker-0", [2], pid=os.getpid())
+
+
+@needs_reuseport
+def test_front_rejects_overlapping_device_claims(tmp_path):
+    with pytest.raises(DeviceClaimError):
+        WorkerFront(
+            functools.partial(_make_gateway), n_workers=2,
+            device_claims={0: [0], 1: [0]}, claims_dir=str(tmp_path),
+        )
+
+
+# -- in-process: snapshot / restore / replay is bit-exact -------------------
+
+
+def test_snapshot_resume_replay_is_bit_equal(svc, tmp_path):
+    """Worker A dies after step 8 with its last snapshot at step 5; worker
+    B (same store, different shard) restores from the snapshot and the
+    client replays 6..8.  Every score must equal an uninterrupted run —
+    bit-equal, not allclose: both paths run the same compiled step on
+    the same state."""
+    T = 12
+    rng = np.random.default_rng(1)
+    data = rng.standard_normal((T, FEATS)).astype(np.float32)
+
+    gw_o = svc.open_gateway(capacity=4)
+    dur_o = enable_durability(gw_o, str(tmp_path / "oracle"), shard="oracle")
+    sid_o, _ = dur_o.admit()
+    oracle = [dur_o.step(sid_o, data[t])[0] for t in range(T)]
+
+    store = str(tmp_path / "store")
+    gw_a = svc.open_gateway(capacity=4)
+    dur_a = enable_durability(gw_a, store, shard="worker-0")
+    sid, token = dur_a.admit()
+    errs, tokens = [], {0: token}
+    for t in range(8):
+        e, seq, tokens[seq] = dur_a.step(sid, data[t])
+        errs.append(e)
+        if t == 4:
+            dur_a.snapshot_now(wait=True)
+    # gw_a "dies" here with steps 6..8 existing only client-side
+
+    gw_b = svc.open_gateway(capacity=4)
+    dur_b = enable_durability(gw_b, store, shard="worker-1")
+    out = dur_b.resume(tokens[8])
+    assert out["sid"] == sid and out["seq"] == 5  # snapshot position
+    errs_b = [dur_b.step(sid, data[t])[0] for t in range(5, T)]
+    np.testing.assert_array_equal(np.asarray(oracle),
+                                  np.asarray(errs[:5] + errs_b))
+
+    # parked handoff: suspend on B, snapshot, resume on a fresh C at the
+    # EXACT position (zero replay needed)
+    last_tok = dur_b.step(sid, np.zeros(FEATS, np.float32))[2]
+    dur_b.suspend(sid)
+    dur_b.snapshot_now(wait=True)
+    gw_c = svc.open_gateway(capacity=4)
+    dur_c = enable_durability(gw_c, store, shard="worker-2")
+    out_c = dur_c.resume(last_tok)
+    assert out_c["seq"] == T + 1
+
+
+def test_step_tokens_amortize_but_resume_anywhere(svc, tmp_path):
+    """Tokens are re-minted every ``token_refresh_steps`` (an epoch bump
+    forces it); the cached in-between token resumes just as well because
+    replay position comes from the snapshot + client buffer."""
+    gw = svc.open_gateway(capacity=4)
+    dur = enable_durability(gw, str(tmp_path), shard="w0")
+    dur.token_refresh_steps = 4
+    sid, tok0 = dur.admit()
+    x = np.zeros(FEATS, np.float32)
+    toks = [dur.step(sid, x)[2] for _ in range(8)]
+    assert toks[0] == toks[1] == toks[2] == tok0   # cached (seq 1..3)
+    assert toks[3] != tok0                         # re-mint at seq 4
+    assert toks[3] == toks[4] == toks[5] == toks[6]
+    assert toks[7] != toks[3]                      # re-mint at seq 8
+    gw.recalibrate(threshold=0.5)                  # bumps the epoch ...
+    tok_e = dur.step(sid, x)[2]
+    assert tok_e not in toks                       # ... forcing a re-mint
+    dur.snapshot_now(wait=True)
+    gw2 = svc.open_gateway(capacity=4)
+    dur2 = enable_durability(gw2, str(tmp_path), shard="w1")
+    assert dur2.resume(toks[1])["seq"] == 9        # stale-seq token: fine
+
+
+def test_unknown_session_and_double_resume_rejected(svc, tmp_path):
+    from repro.gateway.durability import SessionActiveError
+    from repro.gateway.tokens import UnknownSessionError
+
+    gw = svc.open_gateway(capacity=4)
+    dur = enable_durability(gw, str(tmp_path), shard="w0")
+    sid, tok = dur.admit()
+    dur.step(sid, np.zeros(FEATS, np.float32))
+    with pytest.raises(SessionActiveError):
+        dur.resume(tok)  # still live on this worker
+    ghost = dur.store.signer.issue("s-0000000000000000", 3)
+    with pytest.raises(UnknownSessionError):
+        dur.resume(ghost)  # validly signed, exists in no snapshot
+
+
+# -- over the wire: SIGKILL -> token resume -> drain handoff ----------------
+
+
+@needs_reuseport
+def test_sigkill_resume_matches_oracle_and_drain_migrates(svc, tmp_path):
+    """The ISSUE-6 acceptance path end to end: kill the worker serving a
+    stream, resume by token on the respawned front (scores bit-equal
+    within the replay window vs a solo oracle), then drain with the
+    session resident — it must be MIGRATED, not lost — and resume it
+    once more on a brand-new front over the same store."""
+    T, kill_at, snap_at = 16, 9, 6
+    data = _series(7, T)
+    oracle = _solo_errors(svc, data)
+    store = str(tmp_path / "store")
+    f = WorkerFront(functools.partial(_make_gateway), n_workers=2,
+                    heartbeat_ms=50.0, store_dir=store,
+                    snapshot_interval_ms=200.0)
+    host, port = f.start(ready_timeout=180.0)
+    c1 = GatewayClient(host, port)
+    summary = None
+    try:
+        scores = []
+        for t in range(kill_at):
+            scores.append(c1.step(data[t])["running_error"])
+            if t + 1 == snap_at:
+                c1.request("snapshot")  # deterministic snapshot barrier
+        token, replay = c1.session_token, c1.replay_buffer()
+        assert token and c1.session_seq == kill_at
+
+        victim = next(w["pid"] for w in f.stats()["per_worker"]
+                      if w["active_streams"] == 1)
+        os.kill(victim, signal.SIGKILL)
+        assert _wait_until(lambda: f.restarts == 1 and f.alive_workers == 2)
+        # durable front: the killed worker's stream is recoverable, NOT
+        # counted as lost (contrast test_workers.py without a store)
+        assert f.sessions_lost == 0
+        try:
+            c1.close()
+        except Exception:
+            pass
+
+        with GatewayClient(host, port) as c2:
+            out = c2.resume(token, replay=replay)
+            # the forced snapshot pins seq >= snap_at; the 200ms auto
+            # cadence may have taken a later one, shrinking the replay
+            assert out["seq"] == kill_at
+            assert 0 <= out["replayed"] <= kill_at - snap_at
+            for t in range(kill_at, T):
+                scores.append(c2.step(data[t])["running_error"])
+            # in-process pool vs worker pool: identical compiled step on
+            # identical state, modulo one float32 wire round-trip per score
+            np.testing.assert_allclose(scores, oracle, rtol=1e-5, atol=1e-6)
+            c2.request("snapshot")
+            mig_token = c2.session_token
+            summary = f.shutdown()  # session still resident on some worker
+        assert summary["sessions_migrated"] == 1
+        assert summary["sessions_lost"] == 0
+        assert summary["clean_exits"] == 2 and summary["dropped_tickets"] == 0
+    finally:
+        if summary is None:
+            f.shutdown()
+
+    # a brand-new front over the same store adopts the handoff snapshot
+    f2 = WorkerFront(functools.partial(_make_gateway), n_workers=1,
+                     heartbeat_ms=100.0, store_dir=store)
+    host2, port2 = f2.start(ready_timeout=180.0)
+    try:
+        with GatewayClient(host2, port2) as c3:
+            out = c3.resume(mig_token)
+            assert out["seq"] == T
+            np.testing.assert_allclose(out["running_error"], oracle[-1],
+                                       rtol=1e-5, atol=1e-6)
+    finally:
+        f2.shutdown()
+
+
+@needs_reuseport
+def test_wire_rejects_tampered_expired_unknown_tokens(tmp_path):
+    store = str(tmp_path / "store")
+    f = WorkerFront(functools.partial(_make_gateway), n_workers=1,
+                    heartbeat_ms=100.0, store_dir=store)
+    host, port = f.start(ready_timeout=180.0)
+    try:
+        with GatewayClient(host, port) as c:
+            c.step(np.zeros(FEATS, np.float32))
+            good = c.session_token
+        secret = load_or_create_secret(store)
+
+        def resume_error(token) -> str:
+            with GatewayClient(host, port) as c2:
+                with pytest.raises(GatewayClientError) as ei:
+                    c2.request("resume", token=token)
+            return ei.value.error
+
+        mid = len(good) // 2
+        flipped = good[:mid] + ("A" if good[mid] != "A" else "B") + good[mid + 1:]
+        assert resume_error(flipped) == "TamperedTokenError"
+        assert resume_error("garbage") == "TamperedTokenError"
+        expired = TokenSigner(
+            secret, ttl_s=3600.0, clock=lambda: time.time() - 7200.0
+        ).issue("s-feedfacefeedface", 3)
+        assert resume_error(expired) == "ExpiredTokenError"
+        unknown = TokenSigner(secret).issue("s-feedfacefeedface", 3)
+        assert resume_error(unknown) == "UnknownSessionError"
+    finally:
+        f.shutdown()
+
+
+# -- control plane: param swap over the pipes + respawn replay --------------
+
+
+@needs_reuseport
+def test_recalibrate_params_fans_out_and_survives_respawn(svc):
+    scaled = jax.tree.map(lambda p: p * 1.25, svc.params)
+    oracle = AnomalyService(ARCH, schedule="wavefront")
+    oracle._bind(jax.tree.map(np.asarray, scaled))
+    window = _series(55, 8)
+    import jax.numpy as jnp
+    want = float(oracle.score(jnp.asarray(window[None]))[0])
+    base = float(svc.score(jnp.asarray(window[None]))[0])
+    assert abs(want - base) > 1e-9  # the swap must be observable
+
+    f = WorkerFront(functools.partial(_make_gateway), n_workers=2,
+                    heartbeat_ms=50.0)
+    host, port = f.start(ready_timeout=180.0)
+    summary = None
+    try:
+        out = f.recalibrate(params=scaled)
+        assert out["workers"] == 2 and out["params_swapped"]
+        for _ in range(3):  # several connections: exercise both workers
+            with GatewayClient(host, port) as c:
+                np.testing.assert_allclose(c.score(window), want,
+                                           rtol=1e-5, atol=1e-6)
+        # kill either worker: the supervisor must replay the param swap
+        # onto the respawn or acceptors would serve different models
+        victim = f.stats()["per_worker"][0]["pid"]
+        os.kill(victim, signal.SIGKILL)
+        assert _wait_until(lambda: f.restarts == 1 and f.alive_workers == 2)
+
+        def respawn_caught_up() -> bool:
+            for _ in range(4):
+                with GatewayClient(host, port) as c:
+                    if abs(c.score(window) - want) > 1e-4:
+                        return False
+            return True
+
+        assert _wait_until(respawn_caught_up, timeout=90.0)
+        summary = f.shutdown()
+        assert summary["clean_exits"] == 2
+    finally:
+        if summary is None:
+            f.shutdown()
