@@ -19,7 +19,9 @@ counts) is informational and not gated.  A row carrying an ``error``
 field in the CURRENT table fails outright; an error row in the BASELINE
 is skipped (the baseline itself was bad — re-baseline).  A row present
 in the baseline but missing from the current table fails; a new current
-row passes with a note (it needs a baseline on the next re-baseline).
+row in a GATED table (one with a committed baseline) also fails until a
+baseline entry exists — run with ``--update`` to admit it, so new rows
+can never ride ungated through a table CI already trusts.
 
 Usage::
 
@@ -137,8 +139,11 @@ def check_file(current_path: Path, baseline_path: Path, tol: float) -> list:
             ))
     for name in current:
         if name not in baseline:
-            lines.append(("NOTE", f"{name}: no baseline yet (new row; "
-                          f"re-baseline to start gating it)"))
+            # this table IS gated (a baseline exists for it) — a brand-new
+            # row must not slip through ungated; --update admits it
+            lines.append(("FAIL", f"{name}: new row in a gated table has "
+                          f"no baseline entry; re-baseline with --update "
+                          f"to admit it"))
     return lines
 
 

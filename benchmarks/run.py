@@ -40,6 +40,11 @@ the table-specific payload, ';'-separated).
                        cold resume-from-snapshot latency on a second
                        gateway sharing the store
                        (``--json BENCH_durability.json`` in CI)
+  obs_overhead       — the observability tax: the same pooled-streaming
+                       and micro-batch score traffic with per-stage
+                       histograms + span tracing ON (obs_detail=True,
+                       the default) vs OFF; ``vs_off`` must stay within
+                       5% of 1.0 (``--json BENCH_obs.json`` in CI)
   roofline_cells     — §Roofline summary over experiments/dryrun artifacts
 
 ``--tables`` selects a subset; ``--json PATH`` additionally dumps the
@@ -607,6 +612,141 @@ def gateway_durability() -> list[str]:
     return rows
 
 
+def obs_overhead() -> list[str]:
+    """The observability tax on both serving hot paths (``--json
+    BENCH_obs.json`` in CI).
+
+    Prices the plane AS SHIPPED: the ON arm runs ``obs_detail=True``
+    (per-stage histograms at every instrumented site), a live JSONL
+    event log, and traced spans at the documented 1-in-16 sampled
+    cadence — spans are per-request opt-in, so tracing every request
+    would price a workload the stack never runs.  The OFF arm runs
+    ``obs_detail=False``, no spans, no log (the request-latency
+    histogram stays on in both: it is the product surface, not
+    overhead).
+
+    Methodology: ONE gateway serves both arms (a two-gateway A/B on a
+    one-core box showed ~4% identity bias between IDENTICAL gateways,
+    swamping the real cost), rounds run in adjacent ON/OFF PAIRS with
+    the within-pair order alternating, and ``vs_off`` is the MEDIAN of
+    per-pair off/on time ratios — drift cancels inside each pair,
+    position bias cancels across pairs, and the median rejects
+    scheduler outliers.  An A/A placebo of this design reads 1.00
+    +/- 0.01 where block-averaged designs read 0.92-1.07.  ``vs_off``
+    is the gated claim: histogram-bucket arithmetic + sampled-span
+    bookkeeping must cost <=5% on either path.
+    """
+    import statistics
+    import tempfile
+
+    import numpy as np
+
+    from repro.engine import AnomalyService
+
+    arch, feats = "lstm-ae-f32-d2", 32
+    sample = 16  # trace every 16th round (the sampled-tracing cadence)
+    svc = AnomalyService(arch, schedule="wavefront")
+    rows = []
+    log_path = Path(tempfile.mkdtemp(prefix="obs_bench_")) / "events.jsonl"
+
+    # -- pooled streaming: wire-style one step per request -----------------
+    # 3 independent sweeps of 48 pairs; the reported ratio is the median
+    # of per-sweep medians, so one load spike degrades one sweep, not the
+    # claim
+    n, pairs, sweeps = 16, 48, 3
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((pairs * 2, n, feats)).astype(np.float32)
+    gw = svc.open_gateway(capacity=n, obs_detail=True)
+    gw.attach_event_log(log_path)
+    ids = [f"s{i}" for i in range(n)]
+    for sid in ids:
+        gw.admit(sid)
+    gw.step({ids[0]: xs[0, 0]})  # compile the masked step
+
+    def stream_round(r: int, on: bool, traced: bool) -> float:
+        gw.telemetry.detail = on
+        t0 = time.perf_counter()
+        if traced:
+            for i, sid in enumerate(ids):
+                span = gw.tracer.start("step")
+                gw.step({sid: xs[r, i]})
+                span.mark("compute")
+                gw.tracer.finish(span)
+        else:
+            for i, sid in enumerate(ids):
+                gw.step({sid: xs[r, i]})
+        return time.perf_counter() - t0
+
+    sweep_ratios, on_times, off_times = [], [], []
+    for s in range(sweeps):
+        ratios = []
+        for p in range(pairs):
+            traced = p % sample == 0  # 1-in-16 ON rounds carry spans
+            r = 2 * (s * pairs + p) % (pairs * 2)
+            if p % 2 == 0:  # alternate within-pair order: ON / OFF first
+                t_on = stream_round(r, True, traced)
+                t_off = stream_round(r + 1, False, False)
+            else:
+                t_off = stream_round(r, False, False)
+                t_on = stream_round(r + 1, True, traced)
+            ratios.append(t_off / t_on)
+            on_times.append(t_on)
+            off_times.append(t_off)
+        sweep_ratios.append(statistics.median(ratios))
+    on_sps = n / statistics.median(on_times)
+    off_sps = n / statistics.median(off_times)
+    rows.append(
+        f"obs.stream.{arch}.pool{n},{1e6 / on_sps:.1f},"
+        f"on_sps={on_sps:.0f};off_sps={off_sps:.0f};"
+        f"vs_off={statistics.median(sweep_ratios):.2f}x"
+    )
+
+    # -- micro-batch one-shot scoring --------------------------------------
+    # one score call is ~50-70us, too small to pair cleanly against
+    # timer + scheduler noise; each arm runs a GROUP of calls per pair
+    b, score_pairs, group = 16, 24, 8
+    windows = rng.standard_normal((b, 16, feats)).astype(np.float32)
+    batch = list(windows)
+    gw.score(batch)  # compile the score bucket
+
+    def score_group(on: bool) -> float:
+        gw.telemetry.detail = on
+        t0 = time.perf_counter()
+        for g in range(group):
+            if on and g == 0:  # 1-in-`group` calls traced: ~the cadence
+                span = gw.tracer.start("score")
+                gw.score(batch)
+                span.mark("compute")
+                gw.tracer.finish(span)
+            else:
+                gw.score(batch)
+        return time.perf_counter() - t0
+
+    sweep_ratios, on_times, off_times = [], [], []
+    for s in range(sweeps):
+        ratios = []
+        for p in range(score_pairs):
+            if p % 2 == 0:
+                t_on = score_group(True)
+                t_off = score_group(False)
+            else:
+                t_off = score_group(False)
+                t_on = score_group(True)
+            ratios.append(t_off / t_on)
+            on_times.append(t_on)
+            off_times.append(t_off)
+        sweep_ratios.append(statistics.median(ratios))
+    on_rps = b * group / statistics.median(on_times)
+    off_rps = b * group / statistics.median(off_times)
+    rows.append(
+        f"obs.score.{arch}.b{b},{1e6 / on_rps:.1f},"
+        f"on_rps={on_rps:.0f};off_rps={off_rps:.0f};"
+        f"vs_off={statistics.median(sweep_ratios):.2f}x"
+    )
+    gw.attach_event_log(None)
+    return rows
+
+
 def roofline_cells(dryrun_dir: str = "experiments/dryrun") -> list[str]:
     rows = []
     d = Path(dryrun_dir)
@@ -638,6 +778,7 @@ _TABLES = {
     "gateway_sharding": gateway_sharding,
     "gateway_workers": gateway_workers,
     "gateway_durability": gateway_durability,
+    "obs_overhead": obs_overhead,
     "roofline_cells": roofline_cells,
 }
 

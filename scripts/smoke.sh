@@ -10,8 +10,9 @@
 #   6. the same transport on a sharded placement (--mesh data=2 over two
 #      forced host devices): pool slots + micro-batch rows shard 2-way
 #   7. the multi-worker front (--workers 2): two concurrent clients over
-#      one SO_REUSEPORT port, SIGTERM -> every worker exits cleanly with
-#      zero dropped tickets
+#      one SO_REUSEPORT port, a live GET /metrics scrape of the
+#      front-aggregated Prometheus view, then SIGTERM -> every worker
+#      exits cleanly with zero dropped tickets
 #   8. durable sessions: SIGKILL a worker mid-stream, resume on the
 #      respawned front with the signed token + client replay buffer —
 #      scores must be bit-equal to an uninterrupted oracle, and the
@@ -76,7 +77,7 @@ grep -q "mesh=2xdata" "$SHARDED_LOG" || {
 WORKERS_LOG=$(mktemp)
 python -m repro.launch.serve --arch lstm-ae-f32-d2 --http --workers 2 \
   --mesh data=1 --port 0 --train-steps 0 --capacity 8 --max-batch 8 \
-  >"$WORKERS_LOG" 2>&1 &
+  --metrics-port 0 >"$WORKERS_LOG" 2>&1 &
 WPID=$!
 trap 'kill "'"$WPID"'" 2>/dev/null || true' EXIT
 for _ in $(seq 1 300); do
@@ -94,6 +95,22 @@ WC1=$!
 python examples/gateway_client.py --port "$WPORT" --timesteps 12 --requests 10 --seed 1 &
 WC2=$!
 wait "$WC1" && wait "$WC2" || { echo "worker-front client failed"; cat "$WORKERS_LOG"; exit 1; }
+
+# scrape the live front-aggregated /metrics view (Prometheus text): the
+# supervisor endpoint must report both workers and traffic the two
+# clients just pushed through the merged request histograms
+MPORT=$(sed -n 's/.*metrics_port=\([0-9]*\).*/\1/p' "$WORKERS_LOG" | head -1)
+[ -n "$MPORT" ] || { echo "worker front never reported metrics_port"; cat "$WORKERS_LOG"; exit 1; }
+python - "$MPORT" <<'PYEOF'
+import sys, urllib.request
+body = urllib.request.urlopen(
+    f"http://127.0.0.1:{sys.argv[1]}/metrics", timeout=30).read().decode()
+for needle in ('repro_workers_count{scope="front"} 2',
+               "repro_queue_completed_total",
+               'repro_request_ms_bucket{le="+Inf",scope="front"}'):
+    assert needle in body, f"missing {needle!r} in /metrics:\n{body}"
+print("metrics scrape OK:", len(body.splitlines()), "lines")
+PYEOF
 
 kill -TERM "$WPID"
 wait "$WPID"   # non-zero (or hang) here == unclean shutdown, smoke fails

@@ -18,6 +18,7 @@ comparison needs and what future backends plug into.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from dataclasses import dataclass
 from typing import Optional, Union
@@ -204,6 +205,14 @@ class Engine:
                 mstep, in_shardings=(repl, rows, rows, rows),
                 out_shardings=(rows, rows))
 
+        # Compile profiling: a jitted program (re)traces+compiles on the
+        # first call per input shape, so the first-call wall time per
+        # (program, shape) is the compile-cost proxy — that is what makes
+        # a recompile storm on the bucket ladder visible in stats().
+        self._seen_shapes: set = set()
+        self.profile: dict = {"compiles": 0, "compile_ms": 0.0,
+                              "per_program": {}}
+
     # -- placement ---------------------------------------------------------
 
     @property
@@ -233,6 +242,47 @@ class Engine:
             return prog
         return None
 
+    # -- profiling ---------------------------------------------------------
+
+    def _run_profiled(self, name: str, prog, shape: tuple, *args):
+        """Dispatch ``prog`` and, on the first call per (program, shape),
+        record its wall time as that shape's compile cost (tracing and
+        compilation happen synchronously inside the first dispatch).
+        Steady-state cost is one set lookup."""
+        key = (name, shape)
+        if key in self._seen_shapes:
+            return prog(*args)
+        t0 = time.perf_counter()
+        out = prog(*args)
+        ms = (time.perf_counter() - t0) * 1e3
+        self._seen_shapes.add(key)
+        self.profile["compiles"] += 1
+        self.profile["compile_ms"] += ms
+        per = self.profile["per_program"].setdefault(
+            name, {"compiles": 0, "compile_ms": 0.0, "shapes": []}
+        )
+        per["compiles"] += 1
+        per["compile_ms"] += ms
+        per["shapes"].append(list(shape))
+        return out
+
+    def profile_info(self) -> dict:
+        """JSON-safe compile profile: total + per-program compile counts,
+        first-call wall time, and the shapes (bucket ladder rungs) seen."""
+        return {
+            "schedule": self.schedule.tag,
+            "compiles": self.profile["compiles"],
+            "compile_ms": round(self.profile["compile_ms"], 3),
+            "per_program": {
+                name: {
+                    "compiles": d["compiles"],
+                    "compile_ms": round(d["compile_ms"], 3),
+                    "shapes": list(d["shapes"]),
+                }
+                for name, d in self.profile["per_program"].items()
+            },
+        }
+
     # -- binding ----------------------------------------------------------
 
     def bind(self, params: Params) -> "Engine":
@@ -250,16 +300,22 @@ class Engine:
     def reconstruct_with(self, params: Params, batch: dict) -> jnp.ndarray:
         """batch {"series": (B, T, F)} -> reconstruction (B, T, F)."""
         series = batch["series"]
-        prog = self._row_program("reconstruct", series.shape[0]) or self._reconstruct
-        return prog(params, series)
+        sharded = self._row_program("reconstruct", series.shape[0])
+        return self._run_profiled(
+            "reconstruct@sharded" if sharded is not None else "reconstruct",
+            sharded or self._reconstruct, tuple(series.shape), params, series,
+        )
 
     def score_with(self, params: Params, batch: dict) -> jnp.ndarray:
         """batch {"series": (B, T, F)} -> per-sequence reconstruction MSE (B,)
         — the anomaly score of the paper's application.  Under a sharded
         placement the batch rows are scored data-parallel over the mesh."""
         series = batch["series"]
-        prog = self._row_program("score", series.shape[0]) or self._score
-        return prog(params, series)
+        sharded = self._row_program("score", series.shape[0])
+        return self._run_profiled(
+            "score@sharded" if sharded is not None else "score",
+            sharded or self._score, tuple(series.shape), params, series,
+        )
 
     def score_masked_with(self, params: Params, batch: dict) -> jnp.ndarray:
         """batch {"series": (B, T, F), "lengths": (B,) int} -> per-sequence
@@ -269,8 +325,12 @@ class Engine:
         (which pads B to a per-device multiple under a sharded placement)."""
         series = batch["series"]
         lengths = jnp.asarray(batch["lengths"], jnp.int32)
-        prog = self._row_program("score_masked", series.shape[0]) or self._score_masked
-        return prog(params, series, lengths)
+        sharded = self._row_program("score_masked", series.shape[0])
+        return self._run_profiled(
+            "score_masked@sharded" if sharded is not None else "score_masked",
+            sharded or self._score_masked, tuple(series.shape),
+            params, series, lengths,
+        )
 
     def reconstruct(self, batch: dict) -> jnp.ndarray:
         return self.reconstruct_with(self._require_params(), batch)
@@ -313,8 +373,11 @@ class Engine:
         self, params: Params, x_t: jnp.ndarray, state: Params
     ) -> tuple[jnp.ndarray, Params]:
         """One streaming timestep x_t (B, F) -> (reconstruction (B, F), state)."""
-        prog = self._row_program("step", x_t.shape[0]) or self._step
-        return prog(params, x_t, state)
+        sharded = self._row_program("step", x_t.shape[0])
+        return self._run_profiled(
+            "step@sharded" if sharded is not None else "step",
+            sharded or self._step, tuple(x_t.shape), params, x_t, state,
+        )
 
     def stream(self, x_t: jnp.ndarray, state: Params) -> tuple[jnp.ndarray, Params]:
         return self.stream_with(self._require_params(), x_t, state)
@@ -328,8 +391,11 @@ class Engine:
         this one compiled program — slot churn never retraces.  Under a
         sharded placement the slot rows live distributed over the data
         mesh (state in, state out keep the row sharding)."""
-        prog = self._row_program("mstep", x_t.shape[0]) or self._mstep
-        return prog(params, x_t, state, mask)
+        sharded = self._row_program("mstep", x_t.shape[0])
+        return self._run_profiled(
+            "mstep@sharded" if sharded is not None else "mstep",
+            sharded or self._mstep, tuple(x_t.shape), params, x_t, state, mask,
+        )
 
     def stream_masked(
         self, x_t: jnp.ndarray, state: Params, mask: jnp.ndarray

@@ -70,6 +70,10 @@ _SCHEDULE_FIELDS: dict[str, Optional[tuple[str, ...]]] = {}
 # distinct EngineConfigs.  Keys are canonicalised (see _canonical_cfg).
 SCHEDULE_CACHE_CAPACITY = 32
 _RESOLVE_CACHE: "OrderedDict[tuple, Schedule]" = OrderedDict()
+# Monotonic resolve counters (process lifetime, not reset with the cache):
+# a miss is a full factory build — possibly a fresh mesh + retrace — so a
+# climbing miss count under steady serving is a recompile storm in progress.
+_CACHE_STATS = {"hits": 0, "misses": 0}
 
 
 def register_schedule(name: str, *, config_fields: Optional[tuple[str, ...]] = None):
@@ -117,6 +121,8 @@ def schedule_cache_info() -> dict:
         "capacity": SCHEDULE_CACHE_CAPACITY,
         "always_keyed": ("schedule", "placement"),
         "placements": sorted({repr(k[2].placement) for k in _RESOLVE_CACHE}),
+        "hits": _CACHE_STATS["hits"],
+        "misses": _CACHE_STATS["misses"],
     }
 
 
@@ -156,11 +162,13 @@ def resolve_schedule(name: str, cfg: ModelConfig, engine_cfg: "EngineConfig") ->
     key = (name, cfg, canon)
     sched = _RESOLVE_CACHE.get(key)
     if sched is None:
+        _CACHE_STATS["misses"] += 1
         sched = _SCHEDULES[name](cfg, canon)
         _RESOLVE_CACHE[key] = sched
         while len(_RESOLVE_CACHE) > SCHEDULE_CACHE_CAPACITY:
             _RESOLVE_CACHE.popitem(last=False)
     else:
+        _CACHE_STATS["hits"] += 1
         _RESOLVE_CACHE.move_to_end(key)
     return sched
 

@@ -43,9 +43,11 @@ import numpy as np
 
 from repro.engine.base import Engine
 from repro.engine.placement import Placement
+from repro.engine.schedules import schedule_cache_info
 from repro.gateway.pool import PoolFullError, SessionPool, UnknownStreamError
 from repro.gateway.queue import GatewayOverloadedError, MicroBatcher, Ticket, bucket_for
 from repro.gateway.telemetry import Telemetry
+from repro.obs import EventLog, Tracer
 
 _UNSET = object()
 
@@ -64,6 +66,7 @@ class AnomalyGateway:
         max_seq_len: Optional[int] = None,
         placement: Optional["object"] = None,
         clock: Callable[[], float] = time.monotonic,
+        obs_detail: bool = True,
     ):
         engine = getattr(service_or_engine, "engine", service_or_engine)
         if not isinstance(engine, Engine):
@@ -97,7 +100,14 @@ class AnomalyGateway:
         # enable_durability() attaches a DurableSessions coordinator here
         # and the transport/stats pick it up; None keeps PR-5 semantics
         self.durability = None
-        self.telemetry = Telemetry(clock=clock)
+        # observability plane: per-stage histograms gate on ``obs_detail``
+        # (the obs_overhead benchmark's off arm), the tracer produces
+        # spans for requests that opt in with a wire ``trace`` field, and
+        # the event log is a no-op until attach_event_log() points it at
+        # a JSONL file
+        self.telemetry = Telemetry(clock=clock, detail=obs_detail)
+        self.events = EventLog(None)
+        self.tracer = Tracer(clock=clock, events=self.events)
         self.pool = SessionPool(engine, capacity, telemetry=self.telemetry)
         self.batcher = MicroBatcher(
             engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
@@ -179,6 +189,11 @@ class AnomalyGateway:
             else:
                 self._threshold = value
         self.telemetry.count("gateway.recalibrated")
+        self.events.emit(
+            "recalibrate",
+            threshold=self.threshold,
+            params_swapped=params is not None,
+        )
         if self.durability is not None:
             # resumption tokens carry the recalibration epoch so a client
             # can tell its scores straddled a swap (state itself is
@@ -187,6 +202,16 @@ class AnomalyGateway:
         return {"threshold": self.threshold, "params_swapped": params is not None}
 
     # -- observability ----------------------------------------------------
+
+    def attach_event_log(self, path) -> EventLog:
+        """Point the gateway's JSONL event log (lifecycle events + sampled
+        spans) at ``path``; the tracer follows automatically.  Passing
+        None detaches (back to the no-op log)."""
+        old = self.events
+        self.events = EventLog(path)
+        self.tracer.events = self.events
+        old.close()
+        return self.events
 
     @property
     def placement(self) -> Placement:
@@ -205,6 +230,13 @@ class AnomalyGateway:
             features=self.batcher.features,
             threshold=self.threshold,
         )
+        # compile visibility: per-program/per-shape compile counts + wall
+        # time from the engine, resolve-cache hit/miss from the registry —
+        # recompile storms on the bucket ladder show up here
+        out["engine"] = {
+            **self.engine.profile_info(),
+            "schedule_cache": schedule_cache_info(),
+        }
         if self.placement.is_sharded:
             # mesh-layout view: static layout + live per-device residency;
             # the matching per-flush fill history lives in the gauges

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import json
 import socket
+import time
 from collections import OrderedDict
 from typing import Optional, Sequence
 
@@ -208,6 +209,50 @@ class GatewayClient:
         """Submit one window and block for its score."""
         return float(self.request("score", series=np.asarray(
             series, np.float32).tolist())["score"])
+
+    def traced_score(self, series) -> dict:
+        """One-shot score carrying a trace id, returning the full span.
+
+        The request's ``trace`` field opts the server into span capture
+        (old servers simply ignore it — the field is additive); the
+        response's ``trace.stages`` carries the server-side breakdown
+        (``dispatch`` / ``queue_wait`` / ``assemble`` / ``compute``).
+        Client-side this method measures ``serialize`` (ndarray -> JSON
+        text) and attributes the end-to-end remainder to ``wire``
+        (sockets + framing + readline), so the returned stages sum to the
+        observed end-to-end wire latency.
+
+        Returns ``{"score", "trace_id", "stages": {name: ms}, "e2e_ms",
+        "server_ms", "alert"}``.
+        """
+        t0 = time.perf_counter()
+        rid = self._next_id
+        self._next_id += 1
+        tid = f"c{rid:x}"
+        body = json.dumps({
+            "op": "score", "id": rid, "trace": tid,
+            "series": np.asarray(series, np.float32).tolist(),
+        })
+        t_serialized = time.perf_counter()
+        self._sock.sendall((body + "\n").encode())
+        resp = self.collect(rid)
+        e2e_ms = (time.perf_counter() - t0) * 1e3
+        trace = resp.get("trace") or {}
+        stages = {"serialize": (t_serialized - t0) * 1e3}
+        stages.update(trace.get("stages") or {})
+        # everything not attributed above is transit: kernel buffers,
+        # framing, the reply's decode.  Clamped at 0 — server stages are
+        # sub-intervals of the client's wait, so the remainder is
+        # non-negative up to clock granularity.
+        stages["wire"] = max(0.0, e2e_ms - sum(stages.values()))
+        return {
+            "score": float(resp["score"]),
+            "trace_id": str(trace.get("id", tid)),
+            "stages": stages,
+            "e2e_ms": e2e_ms,
+            "server_ms": trace.get("total_ms"),
+            "alert": resp.get("alert"),
+        }
 
     def score_many(self, windows: Sequence) -> list:
         """Submit every window up front (so the server can micro-batch

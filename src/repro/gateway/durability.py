@@ -233,6 +233,8 @@ class DurableSessions:
             self._parked[sid] = rec
         if self._parked:
             gateway.telemetry.count("durability.adopted", len(self._parked))
+            gateway.events.emit("adopt", shard=store.shard,
+                                sessions=len(self._parked))
         gateway.telemetry.gauge(
             "durability.snapshot_interval_ms", snapshot_interval_ms
         )
@@ -337,6 +339,8 @@ class DurableSessions:
         running = float(self.gateway.pool.error_of(sid))
         self._resumes += 1
         self.gateway.telemetry.count("durability.resumed")
+        self.gateway.events.emit("resume", sid=sid, seq=rec.seq,
+                                 shard=self.store.shard)
         return {
             "sid": sid,
             "seq": rec.seq,
@@ -391,6 +395,11 @@ class DurableSessions:
         t.gauge("durability.snapshot_bytes", out["bytes"])
         t.gauge("durability.snapshot_sessions", len(sessions))
         t.gauge("durability.snapshot_age_s", 0.0)
+        self.gateway.events.emit(
+            "snapshot", shard=self.store.shard,
+            snapshot_id=out["snapshot_id"], sessions=len(sessions),
+            bytes=out["bytes"],
+        )
         return {"sessions": len(sessions), **out}
 
     def maybe_snapshot(self, now: Optional[float] = None) -> bool:
@@ -425,6 +434,10 @@ class DurableSessions:
             **out,
         }
         self.gateway.telemetry.count("durability.migrated", migrated)
+        self.gateway.events.emit(
+            "migration", shard=self.store.shard,
+            sessions_migrated=migrated, parked_carried=len(self._parked),
+        )
         return self.last_handoff
 
     # -- observability -----------------------------------------------------

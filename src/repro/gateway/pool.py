@@ -245,6 +245,7 @@ class SessionPool:
         """
         if not inputs:
             return {}
+        t0 = self.telemetry.now()
         slots = [self._require(sid) for sid in inputs]
         x = np.zeros((self._block, self.features), np.float32)
         mask = np.zeros((self._block,), bool)
@@ -263,6 +264,11 @@ class SessionPool:
         )
         self.telemetry.record_pool_step(len(slots), self.capacity)
         errs = np.asarray(self.errors())
+        # errs forced the device round-trip, so this wall time covers the
+        # full assemble + compiled-step + readback path of one pool step
+        self.telemetry.observe_stage(
+            "pool_step_ms", (self.telemetry.now() - t0) * 1e3
+        )
         return {sid: float(errs[slot]) for sid, slot in zip(inputs, slots)}
 
     # -- durability export / restore --------------------------------------

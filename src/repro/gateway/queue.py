@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.engine.base import Engine
 from repro.gateway.telemetry import Telemetry
+from repro.obs.histogram import Histogram
 
 logger = logging.getLogger(__name__)
 
@@ -58,10 +59,14 @@ class Ticket:
     transport can write the response from the callback without polling.
     """
 
-    __slots__ = ("t_submit", "_score", "_error", "_callbacks")
+    __slots__ = ("t_submit", "stage_ms", "_score", "_error", "_callbacks")
 
     def __init__(self, t_submit: float):
         self.t_submit = t_submit
+        # stage timing breakdown stamped at flush time (queue_wait /
+        # assemble / compute, in ms) — folded into the request's span when
+        # the caller traced it; None until the ticket's flush runs
+        self.stage_ms: Optional[dict] = None
         self._score: Optional[float] = None
         self._error: Optional[BaseException] = None
         self._callbacks: list = []
@@ -251,6 +256,7 @@ class MicroBatcher:
         # the take is out of the queue from here on, success or failure
         self._depth -= n
         self.telemetry.gauge("queue.depth", self._depth)
+        t_flush = self._clock()
         try:
             # fixed (lanes, tb, F) shape: one compile per bucket, ever
             # (lanes == max_batch rounded to a per-device multiple)
@@ -259,6 +265,7 @@ class MicroBatcher:
             for i, (arr, _) in enumerate(take):
                 x[i, : arr.shape[0]] = arr
                 lengths[i] = arr.shape[0]
+            t_assembled = self._clock()
             scores = np.asarray(
                 self.engine.score_masked({"series": x, "lengths": lengths})
             )
@@ -268,12 +275,31 @@ class MicroBatcher:
                 ticket._fail(exc)
             return 0
         now = self._clock()
+        assemble_ms = (t_assembled - t_flush) * 1e3
+        compute_ms = (now - t_assembled) * 1e3
         oldest_wait_ms = (now - take[0][1].t_submit) * 1e3
+        tel = self.telemetry
+        tel.observe_stage("assemble_ms", assemble_ms)
+        tel.observe_stage("compute_ms", compute_ms)
+        # per-ticket stage records resolve their histograms once per
+        # flush, not once per ticket — this loop is the score hot path
+        wait_hist = tel.histograms.get("queue_wait_ms") if tel.detail else None
+        if tel.detail and wait_hist is None:
+            wait_hist = tel.histograms["queue_wait_ms"] = Histogram()
+        req_record = tel.request_histogram.record
         for i, (_, ticket) in enumerate(take):
-            self.telemetry.observe_latency_ms((now - ticket.t_submit) * 1e3)
+            queue_wait_ms = (t_flush - ticket.t_submit) * 1e3
+            ticket.stage_ms = {
+                "queue_wait": queue_wait_ms,
+                "assemble": assemble_ms,
+                "compute": compute_ms,
+            }
+            if wait_hist is not None:
+                wait_hist.record(queue_wait_ms)
+            req_record((now - ticket.t_submit) * 1e3)
             ticket._resolve(float(scores[i]))
-        self.telemetry.count("queue.completed", n)
-        self.telemetry.record_batch(n, self.lanes, oldest_wait_ms)
+        tel.count("queue.completed", n)
+        tel.record_batch(n, self.lanes, oldest_wait_ms)
         if self.placement.is_sharded:
             # real rows pack from lane 0, so contiguous-block sharding puts
             # device d's fill at rows [d*lpd, (d+1)*lpd) — gauge it so

@@ -180,6 +180,7 @@ class GatewayServer:
         )
         self.host, self.port = self._server.sockets[0].getsockname()[:2]
         self._pump_task = asyncio.get_running_loop().create_task(self._pump_loop())
+        self.gateway.events.emit("serve_start", host=self.host, port=self.port)
         return self.host, self.port
 
     async def drain(self, timeout: float = 10.0) -> None:
@@ -217,6 +218,10 @@ class GatewayServer:
                 pass
         if self._handlers:  # handlers evict their sessions on the way out
             await asyncio.wait(self._handlers, timeout=timeout)
+        self.gateway.events.emit(
+            "drain", active_streams=self.gateway.pool.active,
+            queue_depth=self.gateway.batcher.queue_depth,
+        )
 
     async def serve_forever(self) -> None:
         if self._server is None:
@@ -377,6 +382,11 @@ class _Connection:
     # -- dispatch ----------------------------------------------------------
 
     def dispatch(self, line: bytes) -> None:
+        # server-side wire cost per request: JSON decode + handler +
+        # response encode/queue (the transport tax minus kernel + client
+        # time) — the ``wire_ms`` stage histogram when detail is on
+        tel = self.gateway.telemetry
+        t_in = tel.now() if tel.detail else 0.0
         try:
             req = json.loads(line)
             op = req.get("op")
@@ -394,6 +404,8 @@ class _Connection:
             handler(req, rid)
         except Exception as exc:  # per-request isolation: one bad request
             self.send(_error_payload(op, exc), rid)  # never drops the conn
+        if tel.detail:
+            tel.observe_stage("wire_ms", (tel.now() - t_in) * 1e3)
 
     def _alert_field(self, payload: dict, value: float) -> dict:
         threshold = self.gateway.threshold
@@ -415,6 +427,11 @@ class _Connection:
         return None
 
     def _op_step(self, req: dict, rid) -> None:
+        # optional tracing: a "trace" field opts this request into a span
+        # (unknown to PR-3 peers, ignored by them — backward compatible)
+        tid = req.get("trace")
+        span = (self.gateway.tracer.start("step", trace_id=str(tid))
+                if tid is not None else None)
         # validate the payload BEFORE admitting: a malformed first step
         # must not pin a pool slot that never serves
         x = np.asarray(req["x"], np.float32)
@@ -430,6 +447,8 @@ class _Connection:
                 sid = ("conn", self.conn_id, self.session_seq)
                 self.gateway.admit(sid)
                 self.stream_id = sid
+        if span is not None:
+            span.mark("dispatch")
         if self._durable is not None:
             running, seq, token = self._durable.step(self.stream_id, x)
             payload = {"ok": True, "op": "step", "running_error": running,
@@ -437,6 +456,9 @@ class _Connection:
         else:
             running = self.gateway.step({self.stream_id: x})[self.stream_id]
             payload = {"ok": True, "op": "step", "running_error": running}
+        if span is not None:
+            span.mark("compute")
+            payload["trace"] = self.gateway.tracer.finish(span).to_wire()
         self.send(self._alert_field(payload, running), rid)
 
     def _op_close(self, req: dict, rid) -> None:
@@ -486,19 +508,30 @@ class _Connection:
     # -- one-shot scoring --------------------------------------------------
 
     def _op_score(self, req: dict, rid) -> None:
+        tid = req.get("trace")
+        span = (self.gateway.tracer.start("score", trace_id=str(tid))
+                if tid is not None else None)
         series = np.asarray(req["series"], np.float32)
+        if span is not None:
+            # decode + validation; marked BEFORE submit so an inline
+            # size-trigger flush is attributed to the ticket's own
+            # queue_wait/assemble/compute stages, never double-counted
+            span.mark("dispatch")
         ticket = self.gateway.submit(series)  # overload/shape errors -> dispatch
 
         def _completed(t) -> None:
             if t.failed:
                 self.send(_error_payload("score", t.exception()), rid)
             else:
-                self.send(
-                    self._alert_field(
-                        {"ok": True, "op": "score", "score": t.score}, t.score
-                    ),
-                    rid,
+                payload = self._alert_field(
+                    {"ok": True, "op": "score", "score": t.score}, t.score
                 )
+                if span is not None:
+                    for stage, ms in (t.stage_ms or {}).items():
+                        span.stage(stage, ms)
+                    payload["trace"] = \
+                        self.gateway.tracer.finish(span).to_wire()
+                self.send(payload, rid)
 
         # fires now if submit's size-trigger already flushed the bucket,
         # later from the background pump / drain otherwise

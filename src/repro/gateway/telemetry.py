@@ -1,4 +1,4 @@
-"""Gateway telemetry: counters, gauges, and latency percentiles.
+"""Gateway telemetry: counters, gauges, and mergeable latency histograms.
 
 The software analogue of the paper's utilization discussion (Table 1):
 whether the datapath stays fed is visible as *batch-fill ratio* (how much
@@ -7,14 +7,36 @@ occupancy* (active slots / capacity).  Everything is plain host-side
 bookkeeping — one `Telemetry` instance is shared by the session pool and
 the micro-batching queue and surfaced via ``gateway.stats()``.
 
+Latency lives in fixed-boundary log-linear histograms
+(:class:`repro.obs.histogram.Histogram`) instead of a raw sample ring:
+per-worker histograms serialize through ``stats()`` as sparse bucket
+dicts and SUM exactly across workers, so a multi-worker front reports
+true front-wide percentiles.  Besides the request-latency histogram
+(``request_ms``) there are per-stage histograms (``queue_wait_ms``,
+``batch_wait_ms``, ``assemble_ms``, ``compute_ms``, ``wire_ms``,
+``pool_step_ms``) decomposing where wire latency goes; stage recording
+is gated by ``detail`` so the overhead benchmark can price it.
+
+Scalar gauges and vector gauges (per-mesh-shard values) live in separate
+maps — ``gauges`` is honestly ``dict[str, float]`` and ``gauge_vecs``
+holds the tuples — and the uptime epoch is explicit: set at
+construction and on every ``reset()``, so ``stats()`` rates are
+well-defined from the first post-reset event instead of being inflated
+until the window fills.
+
 Single-threaded by design (the gateway is caller-driven); ``clock`` is
 injectable so tests control time.
 """
 from __future__ import annotations
 
 import time
-from collections import defaultdict, deque
-from typing import Callable, Optional
+from collections import defaultdict
+from typing import Callable, Iterable, Tuple
+
+from repro.obs.histogram import Histogram
+
+# the request-latency histogram's key in ``Telemetry.histograms``
+REQUEST_HIST = "request_ms"
 
 
 def percentile(sorted_vals: list, p: float) -> float:
@@ -26,61 +48,76 @@ def percentile(sorted_vals: list, p: float) -> float:
 
 
 class Telemetry:
-    """Counters + gauges + a bounded latency window.
+    """Counters + gauges + fixed-boundary latency histograms.
 
-    counters  monotonically increasing event counts (requests, batches,
-              stream-steps, rejections)
-    gauges    last-set values (queue depth, pool occupancy)
-    latency   ring buffer of per-request ms latencies -> p50/p95
+    counters    monotonically increasing event counts (requests, batches,
+                stream-steps, rejections)
+    gauges      last-set scalar values (queue depth, pool occupancy)
+    gauge_vecs  last-set per-shard vectors (device occupancy / flush fill)
+    histograms  request latency + per-stage decompositions -> p50/p95/p99
     """
 
     def __init__(
         self,
         clock: Callable[[], float] = time.monotonic,
-        latency_window: int = 4096,
+        detail: bool = True,
     ):
         self._clock = clock
+        self.detail = bool(detail)
         self.counters: dict[str, float] = defaultdict(float)
         self.gauges: dict[str, float] = {}
-        self._latency_ms: deque = deque(maxlen=latency_window)
-        self._t0: Optional[float] = None
+        self.gauge_vecs: dict[str, Tuple[float, ...]] = {}
+        self.histograms: dict[str, Histogram] = {}
+        # explicit uptime epoch: rates are well-defined immediately, and
+        # reset() re-arms it (no lazy first-event initialization)
+        self._t0: float = clock()
 
     # -- recording --------------------------------------------------------
 
-    def _touch(self) -> float:
-        now = self._clock()
-        if self._t0 is None:
-            self._t0 = now
-        return now
+    def now(self) -> float:
+        """The telemetry clock (injectable) — shared by instrumented call
+        sites so stage timings and uptime agree on one time source."""
+        return self._clock()
 
     def count(self, name: str, n: float = 1) -> None:
-        self._touch()
         self.counters[name] += n
 
     def gauge(self, name: str, value: float) -> None:
-        self._touch()
         self.gauges[name] = float(value)
 
-    def gauge_vec(self, name: str, values) -> None:
-        """A per-device gauge vector (e.g. slot occupancy or flush fill per
-        mesh shard) — stored as a tuple so ``stats()`` serialises it as a
-        JSON list and mesh imbalance is observable over the wire."""
-        self._touch()
-        self.gauges[name] = tuple(float(v) for v in values)
+    def gauge_vec(self, name: str, values: Iterable[float]) -> None:
+        """A per-device gauge vector (e.g. slot occupancy or flush fill
+        per mesh shard) — kept out of ``gauges`` so that map stays
+        ``dict[str, float]``; ``stats()`` serialises vectors as JSON
+        lists under ``gauge_vecs``."""
+        self.gauge_vecs[name] = tuple(float(v) for v in values)
+
+    def observe(self, name: str, ms: float) -> None:
+        """Record one duration into the named histogram."""
+        hist = self.histograms.get(name)
+        if hist is None:
+            hist = self.histograms[name] = Histogram()
+        hist.record(float(ms))
+
+    def observe_stage(self, name: str, ms: float) -> None:
+        """Per-stage histogram sample; dropped when ``detail`` is off (the
+        obs_overhead benchmark's 'off' arm)."""
+        if self.detail:
+            self.observe(name, ms)
 
     def observe_latency_ms(self, ms: float) -> None:
-        self._touch()
-        self._latency_ms.append(float(ms))
+        self.observe(REQUEST_HIST, ms)
 
     def reset(self) -> None:
-        """Zero all counters/gauges/latency history (and the uptime
-        epoch).  For drawing the line after warm-up traffic — compile
+        """Zero all counters/gauges/histograms and re-arm the uptime
+        epoch.  For drawing the line after warm-up traffic — compile
         warming must not inflate served-request counters or fill
-        ratios."""
+        ratios — and rates are well-defined from the very next event."""
         self.counters.clear()
         self.gauges.clear()
-        self._latency_ms.clear()
-        self._t0 = None
+        self.gauge_vecs.clear()
+        self.histograms.clear()
+        self._t0 = self._clock()
 
     def record_batch(self, filled: int, slots: int, wait_ms: float = 0.0) -> None:
         """One micro-batch flush: ``filled`` real requests in ``slots``
@@ -89,6 +126,7 @@ class Telemetry:
         self.count("batch.filled", filled)
         self.count("batch.slots", slots)
         self.count("batch.wait_ms", wait_ms)
+        self.observe_stage("batch_wait_ms", wait_ms)
 
     def record_pool_step(self, active: int, capacity: int) -> None:
         """One pooled streaming step advancing ``active`` of ``capacity``
@@ -101,13 +139,18 @@ class Telemetry:
 
     # -- reading ----------------------------------------------------------
 
+    @property
+    def request_histogram(self) -> Histogram:
+        hist = self.histograms.get(REQUEST_HIST)
+        if hist is None:
+            hist = self.histograms[REQUEST_HIST] = Histogram()
+        return hist
+
     def latency_percentile(self, p: float) -> float:
-        return percentile(sorted(self._latency_ms), p)
+        return self.request_histogram.percentile(p)
 
     @property
     def uptime_s(self) -> float:
-        if self._t0 is None:
-            return 0.0
         return max(self._clock() - self._t0, 1e-9)
 
     def stats(self) -> dict:
@@ -115,19 +158,24 @@ class Telemetry:
         flushes = c.get("batch.flushes", 0.0)
         slots = c.get("batch.slots", 0.0)
         steps = c.get("pool.stream_steps", 0.0)
-        lat = sorted(self._latency_ms)
+        req = self.request_histogram
         up = self.uptime_s
         return {
             "uptime_s": up,
             "counters": dict(c),
             "gauges": dict(self.gauges),
+            "gauge_vecs": {k: list(v) for k, v in self.gauge_vecs.items()},
             "batch_fill_ratio": (c.get("batch.filled", 0.0) / slots) if slots else 0.0,
             "mean_batch_wait_ms": (c.get("batch.wait_ms", 0.0) / flushes) if flushes else 0.0,
             "latency_ms": {
-                "count": len(lat),
-                "p50": percentile(lat, 50),
-                "p95": percentile(lat, 95),
+                "count": req.count,
+                "p50": req.percentile(50),
+                "p95": req.percentile(95),
+                "p99": req.percentile(99),
+                "sum_ms": req.sum,
+                "buckets": {str(i): n for i, n in sorted(req.counts.items())},
             },
-            "requests_per_s": c.get("queue.completed", 0.0) / up if up else 0.0,
-            "stream_steps_per_s": steps / up if up else 0.0,
+            "histograms": {k: h.to_dict() for k, h in self.histograms.items()},
+            "requests_per_s": c.get("queue.completed", 0.0) / up,
+            "stream_steps_per_s": steps / up,
         }

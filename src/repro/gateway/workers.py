@@ -74,6 +74,9 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Optional
 
+from repro.gateway.telemetry import REQUEST_HIST
+from repro.obs import EventLog, Histogram, MetricsServer
+
 logger = logging.getLogger(__name__)
 
 _UNSET = object()
@@ -176,9 +179,11 @@ class _WorkerControl:
 def _worker_main(index: int, conn, host: str, port: int,
                  factory: Callable, heartbeat_s: float,
                  durability: Optional[dict] = None,
-                 claim: Optional[dict] = None) -> None:
+                 claim: Optional[dict] = None,
+                 obs: Optional[dict] = None) -> None:
     """Entry point of one worker process: register the device claim,
-    build the gateway, attach durability, serve the shared port,
+    build the gateway, attach durability and the observability plane
+    (per-worker event log + /metrics endpoint), serve the shared port,
     heartbeat, drain on SIGTERM/shutdown, report a summary."""
     import asyncio
 
@@ -193,6 +198,8 @@ def _worker_main(index: int, conn, host: str, port: int,
     from repro.gateway.server import GatewayServer
 
     owner = f"worker-{index}"
+    obs = obs or {}
+    metrics = None
     try:
         if claim:
             # validate-at-boot, BEFORE the expensive JAX/factory work: an
@@ -205,6 +212,26 @@ def _worker_main(index: int, conn, host: str, port: int,
             from repro.gateway.durability import enable_durability
 
             enable_durability(gateway, shard=owner, **durability)
+        if obs.get("event_dir"):
+            gateway.attach_event_log(
+                os.path.join(obs["event_dir"], f"{owner}.jsonl"))
+            gateway.events.emit("boot", worker=index, pid=os.getpid())
+        if obs.get("metrics_port") is not None:
+            # deterministic ladder off the supervisor's base port; a base
+            # of 0 means every endpoint binds ephemerally (the bound port
+            # travels back on the ready event)
+            base = int(obs["metrics_port"])
+            want = 0 if base == 0 else base + 1 + index
+            try:
+                metrics = MetricsServer(
+                    gateway.stats, port=want,
+                    labels={"worker": str(index)},
+                ).start()
+            except OSError as exc:
+                # a scrape endpoint must never cost us an acceptor
+                logger.warning("worker %d: /metrics bind on port %d failed "
+                               "(%s); serving without metrics", index, want,
+                               exc)
     except BaseException as exc:
         try:
             conn.send({"event": "error",
@@ -253,7 +280,8 @@ def _worker_main(index: int, conn, host: str, port: int,
         control.install(loop)
         await server.start()
         control.send({"event": "ready", "index": index, "port": server.port,
-                      "pid": os.getpid()})
+                      "pid": os.getpid(),
+                      "metrics_port": metrics.port if metrics else None})
 
         async def _heartbeat() -> None:
             while True:
@@ -290,6 +318,11 @@ def _worker_main(index: int, conn, host: str, port: int,
         control.uninstall()
 
     asyncio.run(_loop())
+    if metrics is not None:
+        try:
+            metrics.stop()
+        except Exception:
+            pass
     if claim:
         try:
             from repro.gateway.claims import DeviceClaimRegistry
@@ -312,6 +345,7 @@ class _Worker:
         self.proc = proc
         self.conn = conn
         self.pid: Optional[int] = None
+        self.metrics_port: Optional[int] = None
         self.ready = threading.Event()
         self.error: Optional[str] = None
         self.last_active = 0
@@ -363,6 +397,8 @@ class WorkerFront:
         snapshot_keep: int = 2,
         device_claims: Optional[dict] = None,
         claims_dir: Optional[str] = None,
+        event_dir: Optional[str] = None,
+        metrics_port: Optional[int] = None,
     ):
         if n_workers < 1:
             raise ValueError(f"n_workers must be >= 1, got {n_workers}")
@@ -416,6 +452,17 @@ class WorkerFront:
                     "claims_dir= (or store_dir=, which it defaults to)"
                 )
             self.device_claims = claims
+        # observability plane: a per-worker JSONL event log plus one
+        # /metrics endpoint per process — supervisor (front aggregate) on
+        # the base port, worker i on base+1+i (all ephemeral when base=0)
+        self.event_dir = None if event_dir is None else str(event_dir)
+        self.metrics_port = metrics_port if metrics_port is None else int(metrics_port)
+        self._obs_cfg = None
+        if self.event_dir is not None or self.metrics_port is not None:
+            self._obs_cfg = {"event_dir": self.event_dir,
+                             "metrics_port": self.metrics_port}
+        self.metrics: Optional[MetricsServer] = None
+        self._events = EventLog(None)
         self.restarts = 0
         self.sessions_lost = 0
         self.sessions_migrated = 0
@@ -442,6 +489,11 @@ class WorkerFront:
         self._reserve.bind((self.host, self.port))
         self.host, self.port = self._reserve.getsockname()[:2]
         self._started = True
+        if self.event_dir is not None:
+            self._events = EventLog(
+                os.path.join(self.event_dir, "supervisor.jsonl"))
+            self._events.emit("boot", workers=self.n_workers,
+                              host=self.host, port=self.port)
         # the executor services worker-initiated fan-outs (aggregate /
         # recalibrate_all); it must not run them on a pipe-reader thread
         # or the fan-out would deadlock waiting on its own reader
@@ -470,6 +522,16 @@ class WorkerFront:
             target=self._monitor_loop, name="front-monitor", daemon=True
         )
         self._monitor.start()
+        if self.metrics_port is not None:
+            try:
+                self.metrics = MetricsServer(
+                    self.stats, host=self.host, port=self.metrics_port,
+                    labels={"scope": "front"},
+                ).start()
+            except OSError as exc:
+                logger.warning("front /metrics bind on port %d failed (%s); "
+                               "per-worker endpoints are unaffected",
+                               self.metrics_port, exc)
         return self.host, self.port
 
     def _abort_start(self, reason: str) -> None:
@@ -478,6 +540,8 @@ class WorkerFront:
             if w.proc.is_alive():
                 w.proc.terminate()
         self._close_reserve()
+        self._events.emit("abort", reason=reason)
+        self._events.close()
         raise RuntimeError(reason)
 
     def _spawn(self, index: int) -> None:
@@ -489,7 +553,8 @@ class WorkerFront:
         proc = self._ctx.Process(
             target=_worker_main,
             args=(index, child_conn, self.host, self.port, self.factory,
-                  self.heartbeat_s, self._durability_cfg, claim),
+                  self.heartbeat_s, self._durability_cfg, claim,
+                  self._obs_cfg),
             name=f"gateway-worker-{index}",
             daemon=True,
         )
@@ -536,6 +601,7 @@ class WorkerFront:
             event = msg.get("event")
             if event == "ready":
                 worker.pid = msg.get("pid", worker.pid)
+                worker.metrics_port = msg.get("metrics_port")
                 worker.ready.set()
             elif event == "heartbeat":
                 worker.last_active = int(msg.get("active", 0))
@@ -603,6 +669,13 @@ class WorkerFront:
                     "session(s) %s; respawning",
                     w.index, w.pid, w.exitcode, w.last_active,
                     "resumable from snapshots" if durable else "lost",
+                )
+                self._events.emit(
+                    "respawn", worker=w.index, pid=w.pid,
+                    exitcode=w.exitcode, sessions_resident=w.last_active,
+                    durable=durable,
+                    respawned=(self.respawn
+                               and self.restarts <= self.max_respawns),
                 )
                 if not self.respawn or self.restarts > self.max_respawns:
                     logger.error("worker %d not respawned (respawn=%s, "
@@ -695,18 +768,26 @@ class WorkerFront:
     def stats(self) -> dict:
         """Aggregated front telemetry: per-worker ``gateway.stats()``
         snapshots (over the control pipes) plus summed pool/queue
-        counters and capacities.  ``latency_ms`` percentiles are the
-        worst worker's (exact cross-worker percentiles would need the
-        raw windows); rate keys sum."""
+        counters and capacities.  ``latency_ms`` percentiles are EXACT
+        front-wide values: every worker ships its fixed-boundary latency
+        histograms and the front sums bucket counts, which reproduces the
+        histogram of the union of all workers' samples bit for bit (no
+        worst-worker approximation); rate keys sum."""
         results, _ = self._fan_out("stats")
         per_worker = []
         for w, s in results:
             w.last_active = int(s.get("active_streams", w.last_active))
-            per_worker.append({"index": w.index, "pid": w.pid, **s})
+            per_worker.append({"index": w.index, "pid": w.pid,
+                               "metrics_port": w.metrics_port, **s})
         counters: dict[str, float] = {}
         for _, s in results:
             for k, v in s.get("counters", {}).items():
                 counters[k] = counters.get(k, 0.0) + float(v)
+        merged: dict[str, Histogram] = {}
+        for _, s in results:
+            for name, data in (s.get("histograms") or {}).items():
+                merged.setdefault(name, Histogram()).merge_from(
+                    Histogram.from_dict(data))
         agg = {
             "workers": {
                 "count": len(results),
@@ -726,19 +807,21 @@ class WorkerFront:
         filled = counters.get("batch.filled", 0.0)
         slots = counters.get("batch.slots", 0.0)
         agg["batch_fill_ratio"] = filled / slots if slots else 0.0
+        agg["histograms"] = {k: h.to_dict() for k, h in merged.items()}
+        req = merged.get(REQUEST_HIST, Histogram())
+        agg["latency_ms"] = {
+            "count": req.count,
+            "p50": req.percentile(50),
+            "p95": req.percentile(95),
+            "p99": req.percentile(99),
+            "sum_ms": req.sum,
+            "buckets": {str(i): n for i, n in sorted(req.counts.items())},
+        }
         if results:
             first = results[0][1]
             for key in ("schedule", "threshold", "features", "max_batch",
                         "max_seq_len"):
                 agg[key] = first.get(key)
-            agg["latency_ms"] = {
-                "count": sum(int(s.get("latency_ms", {}).get("count", 0))
-                             for _, s in results),
-                "p50": max(float(s.get("latency_ms", {}).get("p50", 0.0))
-                           for _, s in results),
-                "p95": max(float(s.get("latency_ms", {}).get("p95", 0.0))
-                           for _, s in results),
-            }
         return agg
 
     def recalibrate(self, *, threshold=_UNSET, params=None, **kw) -> dict:
@@ -866,8 +949,18 @@ class WorkerFront:
         if self._executor is not None:
             self._executor.shutdown(wait=False)
             self._executor = None
+        if self.metrics is not None:
+            try:
+                self.metrics.stop()
+            finally:
+                self.metrics = None
         self._close_reserve()
         self.sessions_migrated += migrated
+        self._events.emit("drain", clean_exits=clean,
+                          dropped_tickets=dropped,
+                          sessions_migrated=migrated,
+                          sessions_lost=self.sessions_lost + drain_lost)
+        self._events.close()
         return {
             "workers": self.n_workers,
             "clean_exits": clean,

@@ -160,13 +160,23 @@ def serve_http(cfg, args) -> None:
 
         enable_durability(gw, args.store_dir,
                           snapshot_interval_ms=args.snapshot_interval_ms)
+    if args.event_dir:
+        gw.attach_event_log(os.path.join(args.event_dir, "server.jsonl"))
+        gw.events.emit("boot", pid=os.getpid())
+    metrics = None
+    if args.metrics_port is not None:
+        from repro.obs import MetricsServer
+
+        metrics = MetricsServer(gw.stats, host=args.host,
+                                port=args.metrics_port).start()
     server = GatewayServer(gw, host=args.host, port=args.port)
 
     def _ready(srv) -> None:
         mesh = (f", mesh={gw.placement.data_shards}x{gw.placement.data_axis}"
                 if gw.placement.is_sharded else "")
         durable = f", store={args.store_dir}" if args.store_dir else ""
-        print(f"[http] listening on {srv.host}:{srv.port} "
+        scrape = f" metrics_port={metrics.port}" if metrics else ""
+        print(f"[http] listening on {srv.host}:{srv.port}{scrape} "
               f"(schedule={gw.engine.schedule.tag}, capacity={gw.pool.capacity}, "
               f"max_batch={gw.batcher.max_batch}, "
               f"max_wait_ms={gw.batcher.max_wait_ms}{mesh}{durable})", flush=True)
@@ -174,6 +184,8 @@ def serve_http(cfg, args) -> None:
     import asyncio
 
     asyncio.run(server.run_until_signal(on_ready=_ready))
+    if metrics is not None:
+        metrics.stop()
     s = gw.stats()
     print(f"[http] drained: {s['counters'].get('queue.completed', 0):.0f} one-shot "
           f"scores ({s['counters'].get('queue.failed', 0):.0f} failed, "
@@ -214,10 +226,13 @@ def serve_workers(cfg, args) -> None:
         n_workers=args.workers, host=args.host, port=args.port, env=env,
         store_dir=args.store_dir or None,
         snapshot_interval_ms=args.snapshot_interval_ms,
+        event_dir=args.event_dir or None,
+        metrics_port=args.metrics_port,
     )
 
     def _ready(f) -> None:
-        print(f"[workers] listening on {f.host}:{f.port} "
+        scrape = f" metrics_port={f.metrics.port}" if f.metrics else ""
+        print(f"[workers] listening on {f.host}:{f.port}{scrape} "
               f"workers={args.workers} mesh={mesh_ways}xdata "
               f"(schedule={args.schedule}, capacity={args.capacity} and "
               f"max_batch={args.max_batch} per worker)", flush=True)
@@ -316,6 +331,17 @@ def main() -> None:
                          "see README §Durability)")
     ap.add_argument("--snapshot-interval-ms", type=float, default=1000.0,
                     help="durability snapshot cadence (with --store-dir)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose GET /metrics (Prometheus text) on this "
+                         "port; 0 picks an ephemeral port (printed as "
+                         "metrics_port= on the 'listening on' line).  With "
+                         "--workers N the supervisor serves the "
+                         "front-aggregated view here and worker i serves "
+                         "its own on port+1+i (README §Observability)")
+    ap.add_argument("--event-dir", default=None,
+                    help="append lifecycle events + sampled request spans "
+                         "as JSONL under this directory (one file per "
+                         "process; README §Observability)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()

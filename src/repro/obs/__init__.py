@@ -1,0 +1,40 @@
+"""Observability plane for the serving stack: traces, histograms, /metrics.
+
+The paper's evaluation is built on per-stage visibility (latency per
+timestep, datapath utilization, energy per step); this package is the
+software analogue for the serving layers:
+
+* :mod:`repro.obs.histogram` — mergeable log-linear latency histograms
+  with FIXED bucket boundaries, so per-worker histograms sum exactly and
+  a multi-worker front reports true front-wide percentiles instead of a
+  worst-worker approximation.
+* :mod:`repro.obs.trace` — a :class:`Tracer` (injectable clock) producing
+  per-request spans whose named stages decompose end-to-end wire latency
+  (client serialize -> wire -> queue wait -> flush assembly -> compiled
+  step -> response).
+* :mod:`repro.obs.events` — an append-only JSONL event log carrying
+  sampled spans plus lifecycle events (boot, respawn, snapshot, resume,
+  migration, recalibrate, drain).
+* :mod:`repro.obs.prometheus` — Prometheus text exposition of
+  ``gateway.stats()``-shaped dicts and a tiny threaded ``/metrics`` HTTP
+  endpoint (``launch/serve.py --metrics-port``).
+
+Everything here is dependency-free host-side bookkeeping: histograms and
+spans serialize as plain JSON-safe dicts so they cross both the workers'
+control pipes (pickle) and the wire protocol (JSON) unchanged.
+"""
+from repro.obs.events import EventLog
+from repro.obs.histogram import Histogram, bucket_bound, bucket_index
+from repro.obs.prometheus import MetricsServer, render_stats
+from repro.obs.trace import Span, Tracer
+
+__all__ = [
+    "EventLog",
+    "Histogram",
+    "MetricsServer",
+    "Span",
+    "Tracer",
+    "bucket_bound",
+    "bucket_index",
+    "render_stats",
+]

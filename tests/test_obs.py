@@ -1,0 +1,215 @@
+"""Observability plane (repro.obs): spans/tracer, the JSONL event log,
+Prometheus exposition + the /metrics endpoint, engine compile profiling
+in stats(), and the end-to-end traced request whose stages must sum to
+the observed wire latency."""
+import json
+import urllib.request
+
+import pytest
+
+from conftest import GATEWAY_ARCH as ARCH, gateway_series as _series
+from repro.engine import AnomalyService
+from repro.gateway.client import GatewayClient
+from repro.gateway.server import GatewayServer
+from repro.obs import EventLog, MetricsServer, Span, Tracer, render_stats
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def svc():
+    return AnomalyService(ARCH, schedule="wavefront")
+
+
+@pytest.fixture
+def served(svc):
+    gw = svc.open_gateway(capacity=4, max_batch=4, max_wait_ms=10.0)
+    server = GatewayServer(gw, port=0, pump_interval_ms=2.0)
+    host, port = server.start_in_thread()
+    yield host, port, gw
+    server.stop_in_thread()
+
+
+# -- spans / tracer ---------------------------------------------------------
+
+
+def test_span_marks_accumulate_and_sum():
+    clk = FakeClock()
+    tracer = Tracer(clock=clk)
+    span = tracer.start("step")
+    clk.advance(0.001)
+    span.mark("dispatch")
+    clk.advance(0.003)
+    span.mark("compute")
+    span.stage("wire", 2.0)  # externally measured stage
+    tracer.finish(span)
+    assert span.stages["dispatch"] == pytest.approx(1.0)
+    assert span.stages["compute"] == pytest.approx(3.0)
+    assert span.stage_sum_ms() == pytest.approx(6.0)
+    assert span.total_ms == pytest.approx(4.0)  # wall, not incl. external
+    wire = span.to_wire()
+    assert set(wire) == {"id", "stages", "total_ms"}
+    assert wire["id"].startswith("t")
+
+
+def test_tracer_sampling_emits_every_nth_span(tmp_path):
+    path = tmp_path / "events.jsonl"
+    clk = FakeClock()
+    events = EventLog(path, clock=clk)
+    tracer = Tracer(clock=clk, events=events, sample_every=3)
+    for _ in range(7):
+        tracer.finish(tracer.start("step"))
+    events.close()
+    kinds = [json.loads(line)["kind"]
+             for line in path.read_text().splitlines()]
+    assert kinds.count("span") == 3  # 1-in-3, first included: 1, 4, 7
+    with pytest.raises(ValueError):
+        Tracer(sample_every=0)
+
+
+def test_event_log_noop_and_jsonl_schema(tmp_path):
+    noop = EventLog(None)
+    assert not noop.enabled
+    noop.emit("boot", worker=0)  # must not raise
+    path = tmp_path / "sub" / "log.jsonl"  # parent dir auto-created
+    log = EventLog(path, clock=FakeClock(5.0))
+    log.emit("boot", worker=1, pid=42)
+    log.emit("drain", active_streams=0)
+    log.close()
+    log.emit("late", x=1)  # after close: swallowed, not raised
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    assert rows == [
+        {"ts": 5.0, "kind": "boot", "worker": 1, "pid": 42},
+        {"ts": 5.0, "kind": "drain", "active_streams": 0},
+    ]
+
+
+# -- prometheus exposition --------------------------------------------------
+
+
+def test_render_stats_names_types_and_histogram():
+    from repro.obs.histogram import Histogram
+
+    h = Histogram()
+    h.record_many([1.0, 2.0, 1e9])  # 1e9 ms -> overflow bucket
+    text = render_stats({
+        "uptime_s": 12.5,
+        "counters": {"queue.completed": 7},
+        "gauges": {"pool.occupancy": 0.5},
+        "gauge_vecs": {"pool.device_active": [1.0, 3.0]},
+        "histograms": {"request_ms": h.to_dict()},
+        "workers": {"count": 2, "restarts": 1},
+    }, labels={"worker": "0"})
+    assert '# TYPE repro_queue_completed_total counter' in text
+    assert 'repro_queue_completed_total{worker="0"} 7' in text
+    assert 'repro_pool_occupancy{worker="0"} 0.5' in text
+    assert 'repro_pool_device_active{shard="0",worker="0"} 1' in text
+    assert 'repro_pool_device_active{shard="1",worker="0"} 3' in text
+    assert 'repro_workers_count{worker="0"} 2' in text
+    assert 'repro_request_ms_count{worker="0"} 3' in text
+    # cumulative buckets end at +Inf == count
+    assert f'repro_request_ms_bucket{{le="+Inf",worker="0"}} 3' in text
+    assert text.endswith("\n")
+
+
+def test_metrics_server_serves_live_gateway(served):
+    host, port, gw = served
+    ms = MetricsServer(gw.stats, port=0).start()
+    try:
+        with GatewayClient(host, port) as client:
+            client.score(_series(0, 6))
+        url = f"http://127.0.0.1:{ms.port}/metrics"
+        body = urllib.request.urlopen(url, timeout=10).read().decode()
+        assert "repro_queue_completed_total 1" in body
+        assert 'repro_request_ms_bucket{le="+Inf"} 1' in body
+        assert "repro_uptime_s" in body
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{ms.port}/other", timeout=10)
+        assert ei.value.code == 404
+    finally:
+        ms.stop()
+
+
+# -- end-to-end traced request ---------------------------------------------
+
+
+def test_traced_score_stages_cover_e2e(served):
+    host, port, gw = served
+    with GatewayClient(host, port) as client:
+        client.score(_series(1, 6))  # warm the bucket: no compile in spans
+        out = client.traced_score(_series(2, 6))
+    assert out["trace_id"].startswith("c")
+    stages = out["stages"]
+    # the acceptance bar: >= 4 named stages, summing to the observed
+    # end-to-end latency (within 5%; wire is the exact remainder, so the
+    # sum is equal by construction — the tolerance guards rounding)
+    server_side = {"dispatch", "queue_wait", "assemble", "compute"}
+    assert server_side <= set(stages)
+    assert {"serialize", "wire"} <= set(stages)
+    assert sum(stages.values()) == pytest.approx(out["e2e_ms"], rel=0.05)
+    assert all(v >= 0.0 for v in stages.values())
+    assert out["server_ms"] <= out["e2e_ms"]
+    # the span also landed in the server-side stage histograms
+    s = gw.stats()
+    assert s["histograms"]["compute_ms"]["count"] >= 2
+    assert s["histograms"]["wire_ms"]["count"] >= 2
+
+
+def test_untraced_requests_carry_no_trace(served):
+    host, port, _ = served
+    with GatewayClient(host, port) as client:
+        rid = client.submit(_series(3, 6))
+        resp = client.collect(rid)
+    assert "trace" not in resp
+
+
+def test_step_trace_over_wire(served):
+    host, port, _ = served
+    with GatewayClient(host, port) as client:
+        resp = client.request("step", x=_series(4, 1)[0].tolist(),
+                              trace="t-abc")
+        assert resp["trace"]["id"] == "t-abc"
+        assert set(resp["trace"]["stages"]) >= {"dispatch", "compute"}
+        client.end_session()
+
+
+# -- engine profiling in stats ---------------------------------------------
+
+
+def test_engine_profile_and_schedule_cache_in_stats(svc):
+    gw = svc.open_gateway(capacity=2, max_batch=2, max_wait_ms=5.0)
+    gw.score([_series(5, 6)])
+    eng = gw.stats()["engine"]
+    before = eng["compiles"]
+    assert before >= 1
+    assert eng["compile_ms"] > 0.0
+    per = eng["per_program"]["score_masked"]
+    assert per["compiles"] >= 1
+    assert all(len(shape) == 3 for shape in per["shapes"])
+    # same shape again: first-call-per-shape proxy records no new compile
+    gw.score([_series(6, 6)])
+    assert gw.stats()["engine"]["compiles"] == before
+    cache = eng["schedule_cache"]
+    assert cache["hits"] >= 0 and cache["misses"] >= 1
+    json.dumps(eng)  # JSON-safe all the way down
+
+
+def test_gateway_event_log_records_lifecycle(tmp_path, svc):
+    gw = svc.open_gateway(capacity=2, max_batch=2, max_wait_ms=5.0)
+    gw.attach_event_log(tmp_path / "gw.jsonl")
+    gw.recalibrate(threshold=0.5)
+    gw.attach_event_log(None)  # detach closes the file
+    rows = [json.loads(line)
+            for line in (tmp_path / "gw.jsonl").read_text().splitlines()]
+    assert [r["kind"] for r in rows] == ["recalibrate"]
+    assert rows[0]["threshold"] == 0.5

@@ -248,8 +248,8 @@ st = gws.stats()
 assert st["placement"]["data"] == 4
 assert st["placement"]["slots_per_device"] == 2
 assert st["placement"]["device_active"] == [2, 2, 2, 2]
-assert len(st["gauges"]["pool.device_active"]) == 4
-assert len(st["gauges"]["queue.device_fill"]) == 4
+assert len(st["gauge_vecs"]["pool.device_active"]) == 4
+assert len(st["gauge_vecs"]["queue.device_fill"]) == 4
 assert "placement" not in gwu.stats()
 
 # uneven capacity pads the block but never admits the padding rows

@@ -1,0 +1,223 @@
+"""Telemetry + mergeable histograms (repro.gateway.telemetry /
+repro.obs.histogram): percentile edge cases, merge exactness (summed
+bucket counts == histogram of the union of samples, bit for bit),
+reset/epoch semantics with an injected clock, and counter/gauge
+round-trips through ``gateway.stats()``."""
+import json
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.gateway.telemetry import REQUEST_HIST, Telemetry, percentile
+from repro.obs.histogram import (
+    NUM_BUCKETS,
+    OVERFLOW_INDEX,
+    Histogram,
+    bucket_bound,
+    bucket_index,
+)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# -- bucket layout ----------------------------------------------------------
+
+
+def test_bucket_layout_is_total_and_monotone():
+    assert bucket_index(0.0) == 0
+    assert bucket_index(-1.0) == 0
+    assert bucket_index(float("nan")) == 0
+    assert bucket_index(float("inf")) == OVERFLOW_INDEX
+    assert bucket_index(1e12) == OVERFLOW_INDEX
+    last = -1
+    for v in (1e-4, 0.01, 0.5, 1.0, 1.4, 3.7, 100.0, 9999.0, 1e7):
+        idx = bucket_index(v)
+        assert idx >= last
+        assert bucket_bound(idx) <= v
+        last = idx
+    assert NUM_BUCKETS == OVERFLOW_INDEX + 1
+
+
+def test_bucket_bounds_round_trip_exactly():
+    """A value sitting exactly on a bucket's lower bound lands in that
+    bucket (no float drift) — the property the front-wide bit-equal
+    percentile guarantee rests on."""
+    for idx in range(OVERFLOW_INDEX):
+        assert bucket_index(bucket_bound(idx)) == idx
+
+
+# -- percentile edge cases --------------------------------------------------
+
+
+def test_percentile_empty_and_single():
+    h = Histogram()
+    assert h.percentile(50) == 0.0
+    assert h.percentile(0) == 0.0
+    assert h.percentile(100) == 0.0
+    assert h.mean() == 0.0
+    h.record(bucket_bound(37))
+    for p in (0, 50, 99, 100):
+        assert h.percentile(p) == bucket_bound(37)
+    assert h.count == 1
+
+
+def test_percentile_p0_p100_are_min_max_buckets():
+    h = Histogram()
+    values = [bucket_bound(i) for i in (5, 80, 200, 300)]
+    h.record_many(values)
+    assert h.percentile(0) == values[0]
+    assert h.percentile(100) == values[-1]
+
+
+def test_percentile_matches_raw_nearest_rank_on_bound_values():
+    """Samples drawn exactly from bucket bounds: histogram percentiles
+    must be BIT-EQUAL to ``telemetry.percentile`` over the raw sorted
+    samples (same nearest-rank convention, lower-bound representative)."""
+    values = sorted(bucket_bound(7 + 13 * k) for k in range(25))
+    h = Histogram()
+    h.record_many(values)
+    for p in (0, 25, 50, 75, 90, 95, 99, 100):
+        assert h.percentile(p) == percentile(values, p)
+
+
+# -- merge exactness --------------------------------------------------------
+
+
+def _hist_of(values):
+    h = Histogram()
+    h.record_many(values)
+    return h
+
+
+@settings(max_examples=40)
+@given(
+    ia=st.lists(st.integers(0, OVERFLOW_INDEX), min_size=0, max_size=30),
+    ib=st.lists(st.integers(0, OVERFLOW_INDEX), min_size=0, max_size=30),
+    ic=st.lists(st.integers(0, OVERFLOW_INDEX), min_size=0, max_size=30),
+)
+def test_merge_is_associative_commutative_and_union_exact(ia, ib, ic):
+    """merge(A, B, C) in any order/grouping == histogram of the union of
+    the samples — exact because the bucket boundaries are fixed."""
+    a, b, c = ([bucket_bound(i) for i in idx] for idx in (ia, ib, ic))
+    union = _hist_of(a + b + c)
+    abc = Histogram.merged([_hist_of(a), _hist_of(b), _hist_of(c)])
+    cba = Histogram.merged([_hist_of(c), _hist_of(b), _hist_of(a)])
+    a_bc = _hist_of(a).merge_from(
+        _hist_of(b).merge_from(_hist_of(c)))
+    for h in (abc, cba, a_bc):
+        assert h.counts == union.counts
+        assert h.count == union.count
+        assert h.sum == pytest.approx(union.sum)
+        for p in (50, 95, 99):
+            assert h.percentile(p) == union.percentile(p)
+
+
+def test_merged_percentiles_equal_raw_union_across_telemetries():
+    """K Telemetry instances (K workers) fed bound-valued latencies:
+    merging their request histograms reproduces raw-sample union
+    percentiles bit for bit — the WorkerFront.stats() guarantee."""
+    import random
+
+    rng = random.Random(11)
+    tels = [Telemetry(clock=FakeClock()) for _ in range(3)]
+    all_values = []
+    for tel in tels:
+        for _ in range(40):
+            v = bucket_bound(rng.randrange(1, OVERFLOW_INDEX))
+            tel.observe_latency_ms(v)
+            all_values.append(v)
+    # over-the-pipe shape: to_dict / from_dict round trip, then merge
+    merged = Histogram.merged(
+        Histogram.from_dict(tel.stats()["histograms"][REQUEST_HIST])
+        for tel in tels
+    )
+    raw = sorted(all_values)
+    assert merged.count == len(raw)
+    for p in (50, 95, 99):
+        assert merged.percentile(p) == percentile(raw, p)
+
+
+def test_histogram_dict_round_trip_is_json_safe():
+    h = _hist_of([0.25, 1.0, 7.5, 1e5])
+    wire = json.loads(json.dumps(h.to_dict()))
+    back = Histogram.from_dict(wire)
+    assert back.counts == h.counts
+    assert back.count == h.count
+    assert back.sum == h.sum
+    assert Histogram.from_dict(None).count == 0
+    assert Histogram.from_dict({}).percentile(99) == 0.0
+
+
+# -- Telemetry semantics ----------------------------------------------------
+
+
+def test_uptime_epoch_explicit_and_reset_rearms():
+    clk = FakeClock(100.0)
+    tel = Telemetry(clock=clk)
+    # well-defined immediately: no lazy first-event epoch
+    assert tel.uptime_s == pytest.approx(1e-9)
+    clk.advance(2.0)
+    tel.count("queue.completed", 10)
+    assert tel.stats()["requests_per_s"] == pytest.approx(5.0)
+    tel.reset()
+    assert tel.stats()["counters"] == {}
+    assert tel.stats()["requests_per_s"] == 0.0
+    clk.advance(1.0)  # rates start from the reset, not from construction
+    tel.count("queue.completed", 3)
+    assert tel.stats()["requests_per_s"] == pytest.approx(3.0)
+
+
+def test_gauge_vec_separate_from_scalar_gauges():
+    tel = Telemetry(clock=FakeClock())
+    tel.gauge("pool.occupancy", 0.5)
+    tel.gauge_vec("pool.device_active", [1, 2, 0])
+    assert tel.gauges == {"pool.occupancy": 0.5}
+    assert all(isinstance(v, float) for v in tel.gauges.values())
+    s = tel.stats()
+    assert s["gauges"]["pool.occupancy"] == 0.5
+    assert s["gauge_vecs"]["pool.device_active"] == [1.0, 2.0, 0.0]
+
+
+def test_detail_flag_gates_stage_histograms_only():
+    on, off = Telemetry(clock=FakeClock()), Telemetry(clock=FakeClock(),
+                                                      detail=False)
+    for tel in (on, off):
+        tel.observe_latency_ms(3.0)
+        tel.observe_stage("compute_ms", 1.5)
+    assert REQUEST_HIST in on.histograms and "compute_ms" in on.histograms
+    assert REQUEST_HIST in off.histograms  # request latency always on
+    assert "compute_ms" not in off.histograms
+
+
+def test_counters_gauges_round_trip_through_gateway_stats():
+    """End-to-end through a real gateway: counted events and gauges come
+    back from ``stats()`` unchanged and JSON-serializable."""
+    from conftest import GATEWAY_ARCH, gateway_series
+    from repro.engine import AnomalyService
+
+    svc = AnomalyService(GATEWAY_ARCH, schedule="sequential")
+    gw = svc.open_gateway(capacity=2, max_batch=2, max_wait_ms=5.0)
+    gw.admit("a")
+    gw.step({"a": gateway_series(0, 1)[0]})
+    gw.evict("a")
+    gw.score([gateway_series(1, 6)])
+    s = json.loads(json.dumps(gw.stats()))  # must be JSON-safe end to end
+    assert s["counters"]["pool.admitted"] == 1
+    assert s["counters"]["queue.completed"] == 1
+    assert s["gauges"]["pool.occupancy"] == 0.0
+    assert s["latency_ms"]["count"] == 1
+    assert s["latency_ms"]["p50"] > 0.0
+    assert s["histograms"][REQUEST_HIST]["count"] == 1
+    # per-stage decomposition present when detail is on (the default)
+    for stage in ("queue_wait_ms", "assemble_ms", "compute_ms"):
+        assert s["histograms"][stage]["count"] == 1
+    assert s["histograms"]["pool_step_ms"]["count"] == 1

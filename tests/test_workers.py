@@ -56,9 +56,11 @@ def svc():
 
 
 @pytest.fixture(scope="module")
-def front():
+def front(tmp_path_factory):
+    obs_dir = tmp_path_factory.mktemp("obs")
     f = WorkerFront(functools.partial(_make_gateway), n_workers=2,
-                    heartbeat_ms=100.0)
+                    heartbeat_ms=100.0, event_dir=str(obs_dir),
+                    metrics_port=0)
     f.start(ready_timeout=180.0)
     yield f
     f.shutdown()
@@ -112,6 +114,64 @@ def test_front_stats_aggregate_sums_workers(front):
     sup = front.stats()
     assert sup["counters"]["queue.completed"] >= total_completed
     assert sup["features"] == FEATS
+
+
+def test_front_latency_percentiles_are_exact_merge(front):
+    """The front's latency percentiles must be BIT-EQUAL to percentiles
+    of the merged per-worker histograms — i.e. of the union of all
+    workers' samples — not the worst worker's (the PR 5 approximation)."""
+    from repro.gateway.telemetry import REQUEST_HIST
+    from repro.obs import Histogram
+
+    windows = [_series(40 + i, 6) for i in range(4)]
+    for _ in range(3):  # several connections: let the kernel spread load
+        with GatewayClient(front.host, front.port) as client:
+            client.score_many(windows)
+    agg = front.stats()
+    merged = Histogram()
+    for w in agg["per_worker"]:
+        merged.merge_from(Histogram.from_dict(
+            (w.get("histograms") or {}).get(REQUEST_HIST)))
+    lat = agg["latency_ms"]
+    assert merged.count == lat["count"] >= 12
+    assert lat["p50"] == merged.percentile(50)
+    assert lat["p95"] == merged.percentile(95)
+    assert lat["p99"] == merged.percentile(99)
+    assert lat["sum_ms"] == pytest.approx(merged.sum)
+    assert lat["buckets"] == {str(i): n
+                              for i, n in sorted(merged.counts.items())}
+    # the merged histograms also travel whole on the aggregate
+    assert agg["histograms"][REQUEST_HIST]["count"] == merged.count
+
+
+def test_front_metrics_endpoints_and_event_logs(front):
+    """One /metrics per process: the supervisor serves the front
+    aggregate, each worker its own labelled view; every process appended
+    a boot event to its JSONL log."""
+    import json
+    import urllib.request
+
+    assert front.metrics is not None  # metrics_port=0 bound ephemerally
+    body = urllib.request.urlopen(
+        f"http://{front.host}:{front.metrics.port}/metrics",
+        timeout=15).read().decode()
+    assert 'repro_workers_count{scope="front"} 2' in body
+    assert "repro_queue_completed_total" in body
+    assert 'repro_request_ms_bucket{le="+Inf",scope="front"}' in body
+    agg = front.stats()
+    for w in agg["per_worker"]:
+        assert w["metrics_port"]
+        wb = urllib.request.urlopen(
+            f"http://127.0.0.1:{w['metrics_port']}/metrics",
+            timeout=15).read().decode()
+        assert f'worker="{w["index"]}"' in wb
+    sup = [json.loads(line) for line in
+           (open(f"{front.event_dir}/supervisor.jsonl"))]
+    assert sup[0]["kind"] == "boot" and sup[0]["workers"] == 2
+    for i in range(2):
+        rows = [json.loads(line) for line in
+                open(f"{front.event_dir}/worker-{i}.jsonl")]
+        assert rows[0]["kind"] == "boot" and rows[0]["worker"] == i
 
 
 def test_recalibrate_fans_out_to_every_worker(front):
