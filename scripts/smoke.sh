@@ -17,6 +17,9 @@
 #      respawned front with the signed token + client replay buffer —
 #      scores must be bit-equal to an uninterrupted oracle, and the
 #      final drain must migrate the resident session (sessions_lost=0)
+#   9. the static-analysis gate (python -m repro.analysis): exit 0 on
+#      the tree with the committed baseline AND nonzero on a
+#      deliberately-bad temp file, so the gate is smoke-tested too
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -50,6 +53,18 @@ run_transport_smoke() {
 if [ -z "${SMOKE_SKIP_TESTS:-}" ]; then
   python -m pytest -x -q
 fi
+
+# the static-analysis gate itself: clean on the repo with the committed
+# baseline, and — so the gate is provably still a gate — nonzero on a
+# deliberately-bad temp file (event-loop-blocking sleep in an async def)
+python -m repro.analysis --baseline analysis/baseline.json
+ANALYSIS_BAD=$(mktemp --suffix=.py)
+printf 'import time\n\n\nasync def f():\n    time.sleep(1)\n' >"$ANALYSIS_BAD"
+if python -m repro.analysis "$ANALYSIS_BAD" --baseline '' >/dev/null 2>&1; then
+  echo "analysis gate FAILED to flag a known-bad file"; exit 1
+fi
+rm -f "$ANALYSIS_BAD"
+echo "analysis gate OK (clean tree passes, known-bad file fails)"
 
 python examples/quickstart.py
 

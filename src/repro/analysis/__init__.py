@@ -1,0 +1,17 @@
+"""Repo-aware static analysis: JAX trace-safety, concurrency-hazard and
+wire/telemetry-contract lints with a committed-baseline gate.
+
+Run as ``python -m repro.analysis`` (see ``__main__.py``); the engine
+and rule packs are importable for the fixture tests::
+
+    from repro.analysis import AnalysisEngine, Baseline, default_rules
+"""
+from repro.analysis.engine import (
+    AnalysisEngine, Baseline, FileContext, Finding, RepoContext, RepoRule,
+    Rule, default_rules,
+)
+
+__all__ = [
+    "AnalysisEngine", "Baseline", "FileContext", "Finding", "RepoContext",
+    "RepoRule", "Rule", "default_rules",
+]

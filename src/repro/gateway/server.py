@@ -215,7 +215,8 @@ class GatewayServer:
                     writer.write_eof()
                 writer.close()
             except Exception:
-                pass
+                logger.debug("writer close failed during drain",
+                             exc_info=True)
         if self._handlers:  # handlers evict their sessions on the way out
             await asyncio.wait(self._handlers, timeout=timeout)
         self.gateway.events.emit(
@@ -366,6 +367,9 @@ class _Connection:
         self.writer = writer
         self.session_seq = 0
         self.stream_id = None  # ("conn", id, generation) when resident
+        # strong refs to in-flight control tasks: the loop only keeps
+        # weak ones, so an unreferenced task can be GC-cancelled mid-op
+        self._control_tasks: set = set()
 
     # -- transport out -----------------------------------------------------
 
@@ -552,7 +556,9 @@ class _Connection:
             else:
                 self.send(wrap(result), rid)
 
-        asyncio.get_running_loop().create_task(run())
+        task = asyncio.get_running_loop().create_task(run())
+        self._control_tasks.add(task)
+        task.add_done_callback(self._control_tasks.discard)
 
     def _op_recalibrate(self, req: dict, rid) -> None:
         kw = {}

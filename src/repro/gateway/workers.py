@@ -322,14 +322,16 @@ def _worker_main(index: int, conn, host: str, port: int,
         try:
             metrics.stop()
         except Exception:
-            pass
+            logger.debug("worker %d: metrics server stop failed", index,
+                         exc_info=True)
     if claim:
         try:
             from repro.gateway.claims import DeviceClaimRegistry
 
             DeviceClaimRegistry(claim["dir"]).release(owner)
         except Exception:
-            pass
+            logger.debug("worker %d: device-claim release failed (claim "
+                         "may linger until reaped)", index, exc_info=True)
 
 
 # ---------------------------------------------------------------------------
@@ -559,7 +561,11 @@ class WorkerFront:
             daemon=True,
         )
         worker = _Worker(index, proc, parent_conn)
-        self._workers[index] = worker
+        # written from start() AND the monitor thread (respawn) while
+        # stats()/broadcasts iterate from other threads — keep the
+        # insert under the class lock
+        with self._lock:
+            self._workers[index] = worker
         # env overrides (XLA_FLAGS et al.) must be in the child's boot
         # environment BEFORE any of its imports run — spawn inherits the
         # parent environment at exec time, so apply/restore around start()
@@ -638,7 +644,8 @@ class WorkerFront:
                 worker.send({"wid": msg["wid"],
                              "error": f"{type(exc).__name__}: {exc}"})
             except Exception:
-                pass
+                logger.debug("worker %d: error reply failed (pipe gone?)",
+                             worker.index, exc_info=True)
 
     def _monitor_loop(self) -> None:
         """Watch worker sentinels; respawn crashed workers (same index,

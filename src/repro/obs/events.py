@@ -17,9 +17,12 @@ a cheap no-op, so call sites never need to branch.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import time
 from typing import Callable, Optional
+
+logger = logging.getLogger(__name__)
 
 
 class EventLog:
@@ -54,7 +57,10 @@ class EventLog:
             self._fh.write(json.dumps(record, default=str) + "\n")
             self._fh.flush()
         except (OSError, ValueError):
-            pass
+            # best-effort sink, but a dead one silently losing every
+            # event is worth a (rate-unbounded, debug-only) trace
+            logger.debug("event log write failed for %r", self.path,
+                         exc_info=True)
 
     def close(self) -> None:
         if self._fh is not None:

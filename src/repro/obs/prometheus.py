@@ -37,6 +37,7 @@ _NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
 # scalar top-level stats() keys worth exposing as gauges
 _SCALAR_GAUGES = (
     "uptime_s", "active_streams", "queue_depth", "capacity", "max_batch",
+    "max_seq_len", "features", "threshold",
     "batch_fill_ratio", "mean_batch_wait_ms", "requests_per_s",
     "stream_steps_per_s", "workers",
 )

@@ -1,0 +1,7 @@
+import time
+
+
+async def handler(reader, writer):
+    time.sleep(0.1)
+    fh = open("data.txt")
+    return fh.read()

@@ -1,0 +1,8 @@
+import threading
+
+_lock = threading.Lock()
+
+
+async def update(store, key, value):
+    with _lock:
+        await store.put(key, value)

@@ -1,0 +1,2 @@
+def kick(loop, coro):
+    loop.create_task(coro)

@@ -1,0 +1,13 @@
+import threading
+
+
+class Registry:
+    def __init__(self):
+        self._items = {}
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        self._items["boot"] = 1
+        with self._lock:
+            self._items["ok"] = 2

@@ -1,0 +1,9 @@
+import multiprocessing as mp
+
+import jax
+
+
+def launch(fn):
+    ctx = mp.get_context("fork")
+    proc = mp.Process(target=fn)
+    return ctx, proc

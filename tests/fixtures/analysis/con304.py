@@ -1,0 +1,9 @@
+def serve(conn):
+    try:
+        conn.flush()
+    except Exception:
+        pass
+    try:
+        conn.close()
+    except:
+        raise

@@ -1,0 +1,9 @@
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def f(x):
+    if x > 0:
+        return jnp.abs(x)
+    return x

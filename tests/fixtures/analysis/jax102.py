@@ -1,0 +1,10 @@
+import jax
+
+LOG = []
+
+
+@jax.jit
+def f(x):
+    print("tracing", x)
+    LOG.append(x)
+    return x

@@ -1,0 +1,8 @@
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def f(x, opts=[1, 2]):
+    return x

@@ -1,0 +1,7 @@
+import jax
+
+
+@jax.jit
+def f(x):
+    jax.debug.print("x = {}", x)
+    return x

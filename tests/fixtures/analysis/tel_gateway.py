@@ -1,0 +1,6 @@
+class Gateway:
+    def stats(self) -> dict:
+        out = {}
+        out.update(depth=self.queue.depth)
+        out["inflight"] = self.queue.inflight
+        return out

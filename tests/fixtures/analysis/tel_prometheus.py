@@ -1,0 +1,5 @@
+_SCALAR_GAUGES = ("uptime_s", "depth")
+
+
+def render(stats):
+    return [f"{key} {stats[key]}" for key in _SCALAR_GAUGES if key in stats]

@@ -1,0 +1,7 @@
+def fetch(sock):
+    resp = sock.recv()
+    return resp["score"], resp.get("detail")
+
+
+def send_score(sock, series):
+    sock.send({"op": "score", "series": series, "priority": 1})

@@ -1,0 +1,3 @@
+def handle(req):
+    series = req["series"]
+    return {"ok": True, "score": sum(len(r) for r in series)}
