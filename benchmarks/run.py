@@ -45,6 +45,18 @@ the table-specific payload, ';'-separated).
                        histograms + span tracing ON (obs_detail=True,
                        the default) vs OFF; ``vs_off`` must stay within
                        5% of 1.0 (``--json BENCH_obs.json`` in CI)
+  gateway_adaptive   — the control plane (repro.control) vs static
+                       serving configs on seeded bursty/diurnal/
+                       adversarial traces through the virtual-clock
+                       simulator in ``benchmarks/traces.py`` (results are
+                       bit-deterministic: no wall clock anywhere), plus
+                       one REAL 2->1-worker scale-down drain.  Gated
+                       claims: adaptive meets the declared p95 SLO on the
+                       bursty trace at >=1.2x the goodput of the best
+                       static arm; priority-0 traffic is never shed while
+                       priority-2 absorbs the flood; the drain reports
+                       zero dropped tickets
+                       (``--json BENCH_adaptive.json`` in CI)
   roofline_cells     — §Roofline summary over experiments/dryrun artifacts
 
 ``--tables`` selects a subset; ``--json PATH`` additionally dumps the
@@ -747,6 +759,208 @@ def obs_overhead() -> list[str]:
     return rows
 
 
+def _scaledown_row() -> str:
+    """One REAL 2->1-worker scale-down: a live :class:`WorkerFront`
+    serves scores before and after ``scale_down()``; the drain summary
+    must report zero dropped tickets (satellite-f accounting)."""
+    import functools
+    import socket
+
+    import numpy as np
+
+    if not hasattr(socket, "SO_REUSEPORT"):
+        return "adaptive.scaledown.w2to1,0.0,error='no SO_REUSEPORT'"
+
+    from repro.gateway.client import GatewayClient
+    from repro.gateway.workers import WorkerFront, default_gateway_factory
+
+    front = WorkerFront(
+        functools.partial(default_gateway_factory, "lstm-ae-f32-d2",
+                          "wavefront", capacity=8, max_batch=8,
+                          max_wait_ms=2.0, warm_seq_len=16),
+        n_workers=2, port=0,
+    )
+    try:
+        host, port = front.start()
+        rng = np.random.default_rng(0)
+        windows = rng.standard_normal((16, 16, 32)).astype(np.float32)
+        with GatewayClient(host, port) as client:
+            client.score_many(list(windows))
+        drain = front.scale_down()
+        # the surviving worker keeps serving new connections
+        with GatewayClient(host, port) as client:
+            client.score_many(list(windows))
+        workers_after = front.stats()["workers"]["count"]
+    except Exception as e:
+        detail = str(e).replace(",", ";").replace("\n", " ")[:160]
+        return f"adaptive.scaledown.w2to1,0.0,error={detail!r}"
+    finally:
+        summary = front.shutdown()
+    problems = []
+    if drain["dropped_tickets"] != 0:
+        problems.append(f"drain dropped {drain['dropped_tickets']} tickets")
+    if not drain["clean"]:
+        problems.append("drain was not clean")
+    if workers_after != 1:
+        problems.append(f"fleet at {workers_after} workers after drain")
+    if summary["dropped_tickets"] != 0:
+        problems.append(f"shutdown dropped {summary['dropped_tickets']}")
+    if problems:
+        detail = "; ".join(problems).replace(",", ";")
+        return f"adaptive.scaledown.w2to1,0.0,error={detail!r}"
+    return (
+        f"adaptive.scaledown.w2to1,0.0,"
+        f"dropped=0;clean=1;migrated={drain['sessions_migrated']};"
+        f"lost={drain['sessions_lost']};workers_after={workers_after};"
+        f"shutdown_clean={summary['clean_exits']}"
+    )
+
+
+def gateway_adaptive() -> list[str]:
+    """The control plane vs static serving on seeded traces (``--json
+    BENCH_adaptive.json`` in CI).
+
+    All ``adaptive.bursty.*`` / ``adaptive.diurnal.*`` /
+    ``adaptive.priority.*`` rows come from the virtual-clock simulator
+    (``benchmarks/traces.py``) running the REAL ``repro.control``
+    controllers: time is simulated, so every number is bit-identical
+    across runs and machines and the gate trends behaviour, not the CI
+    box.  Capacity is scaled (one worker = 400 req/s at full fill) so a
+    60 s trace holds ~5e4 events; the controller's whole world is the
+    slo/floor ratio and utilization, both preserved (service = 1.2x
+    floor, SLO = 5x floor — the shape ``serving_floor_ms`` feeds the
+    live plane).
+
+    Acceptance claims, asserted in-table (violations become ``error=``
+    rows, which ``check.py`` fails):
+
+    * bursty: adaptive (batching + autoscale 2:5) meets the p95 SLO and
+      beats the BEST static arm's goodput by >=1.2x at comparable mean
+      provisioning (static arms run the 2-worker fleet you'd provision
+      for the mean; ``worker_s`` reports what adaptive actually used).
+    * priority: under a priority-2 tenant flood, class 0 sheds NOTHING
+      while class 2 absorbs all shedding; a per-tenant token bucket
+      moves the shedding to ``rate_limited`` without touching the
+      background tenants.
+    * scaledown: a real 2->1 ``WorkerFront`` drain drops zero tickets.
+    """
+    import sys
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    import traces
+
+    from repro.control import Autoscaler, BatchingController
+
+    lanes, unit = 16, 400.0
+    service = lanes * 1e3 / unit          # ms per flush (scaled time)
+    floor = service / 1.2                 # feedforward floor the plane sees
+    slo = 5.0 * floor
+    max_queue = 64
+    sim = dict(lanes=lanes, service_ms=service, slo_ms=slo,
+               max_queue=max_queue)
+
+    def controllers():
+        return (
+            BatchingController(slo_p95_ms=slo, floor_ms=floor, lanes=lanes,
+                               min_wait_ms=0.05 * floor, patience=1,
+                               cooldown_ticks=1),
+            Autoscaler(min_workers=2, max_workers=5, worker_rps=0.8 * unit,
+                       patience=1, cooldown_ticks=1),
+        )
+
+    rows = []
+
+    # -- bursty: SLO compliance + goodput vs the best static arm -----------
+    bursty = traces.make_trace("bursty", unit_rps=unit, seed=0,
+                               duration_s=60.0)
+    statics = {}
+    for arm, mb, wait in (("tight", 16, 0.25 * floor),
+                          ("eager", 4, 0.25 * floor),
+                          ("patient", 16, 3.0 * floor)):
+        r = traces.simulate(bursty, workers=2, max_batch=mb,
+                            max_wait_ms=wait, **sim)
+        statics[arm] = r
+        rows.append(
+            f"adaptive.bursty.static_{arm},{1e6 / max(r['goodput_rps'], 1e-9):.1f},"
+            f"goodput_rps={r['goodput_rps']:.1f};p95_ms={r['p95_ms']:.2f};"
+            f"slo_ms={slo:.2f};shed={r['shed']};fill={r['mean_fill']:.2f};"
+            f"worker_s={r['worker_s']:.0f}"
+        )
+    bat, aut = controllers()
+    a = traces.simulate(bursty, workers=2, max_batch=16,
+                        max_wait_ms=0.25 * floor, batching=bat,
+                        autoscaler=aut, tick_s=0.5, spawn_delay_s=1.0, **sim)
+    best = max(r["goodput_rps"] for r in statics.values())
+    ratio = a["goodput_rps"] / best
+    problems = []
+    if a["p95_ms"] > slo:
+        problems.append(f"p95 {a['p95_ms']:.2f}ms over SLO {slo:.2f}ms")
+    if ratio < 1.2:
+        problems.append(f"goodput only {ratio:.2f}x best static (< 1.2x)")
+    if problems:
+        detail = "; ".join(problems).replace(",", ";")
+        rows.append(f"adaptive.bursty.adaptive,0.0,error={detail!r}")
+    else:
+        rows.append(
+            f"adaptive.bursty.adaptive,{1e6 / a['goodput_rps']:.1f},"
+            f"goodput_rps={a['goodput_rps']:.1f};vs_best_static={ratio:.2f}x;"
+            f"p95_ms={a['p95_ms']:.2f};slo_ms={slo:.2f};met_slo=1;"
+            f"shed={a['shed']};worker_s={a['worker_s']:.0f};"
+            f"scale_ups={a['scale_ups']};scale_downs={a['scale_downs']};"
+            f"knob_actions={a['batching_actions']}"
+        )
+
+    # -- diurnal: slow swing — adaptive sheds nothing, static sheds peaks --
+    diurnal = traces.make_trace("diurnal", unit_rps=unit, seed=2,
+                                duration_s=60.0)
+    s = traces.simulate(diurnal, workers=2, max_batch=16,
+                        max_wait_ms=0.25 * floor, **sim)
+    bat, aut = controllers()
+    d = traces.simulate(diurnal, workers=2, max_batch=16,
+                        max_wait_ms=0.25 * floor, batching=bat,
+                        autoscaler=aut, tick_s=0.5, spawn_delay_s=1.0, **sim)
+    rows.append(
+        f"adaptive.diurnal.static,{1e6 / max(s['goodput_rps'], 1e-9):.1f},"
+        f"goodput_rps={s['goodput_rps']:.1f};p95_ms={s['p95_ms']:.2f};"
+        f"shed={s['shed']}"
+    )
+    rows.append(
+        f"adaptive.diurnal.adaptive,{1e6 / d['goodput_rps']:.1f},"
+        f"goodput_rps={d['goodput_rps']:.1f};vs_static="
+        f"{d['goodput_rps'] / s['goodput_rps']:.2f}x;p95_ms={d['p95_ms']:.2f};"
+        f"shed={d['shed']};worker_s={d['worker_s']:.0f}"
+    )
+
+    # -- adversarial: shed fairness under a priority-2 tenant flood --------
+    adv = traces.make_trace("adversarial", unit_rps=unit, seed=1,
+                            duration_s=30.0)
+    p = traces.simulate(adv, workers=2, max_batch=16,
+                        max_wait_ms=0.25 * floor, classes=3, **sim)
+    shed = p["shed_by_class"]
+    if shed["0"] != 0 or shed["2"] <= 0:
+        detail = f"shed_p0={shed['0']} shed_p2={shed['2']}"
+        rows.append(f"adaptive.priority.classes3,0.0,error={detail!r}")
+    else:
+        rows.append(
+            f"adaptive.priority.classes3,{1e6 / p['goodput_rps']:.1f},"
+            f"goodput_rps={p['goodput_rps']:.1f};shed_p0={shed['0']};"
+            f"shed_p1={shed['1']};shed_p2={shed['2']};"
+            f"p95_ms={p['p95_ms']:.2f}"
+        )
+    t = traces.simulate(adv, workers=2, max_batch=16,
+                        max_wait_ms=0.25 * floor, classes=3,
+                        tenant_rate=0.5 * unit, **sim)
+    rows.append(
+        f"adaptive.priority.tenant_bucket,{1e6 / max(t['goodput_rps'], 1e-9):.1f},"
+        f"goodput_rps={t['goodput_rps']:.1f};rate_limited={t['rate_limited']};"
+        f"shed_p2={t['shed_by_class']['2']};shed_p0={t['shed_by_class']['0']}"
+    )
+
+    # -- one real drain-based scale-down -----------------------------------
+    rows.append(_scaledown_row())
+    return rows
+
+
 def roofline_cells(dryrun_dir: str = "experiments/dryrun") -> list[str]:
     rows = []
     d = Path(dryrun_dir)
@@ -778,6 +992,7 @@ _TABLES = {
     "gateway_sharding": gateway_sharding,
     "gateway_workers": gateway_workers,
     "gateway_durability": gateway_durability,
+    "gateway_adaptive": gateway_adaptive,
     "obs_overhead": obs_overhead,
     "roofline_cells": roofline_cells,
 }

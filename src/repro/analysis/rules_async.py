@@ -34,6 +34,7 @@ from repro.analysis.engine import (
 _TARGETS = (
     "src/repro/gateway/**",
     "src/repro/obs/**",
+    "src/repro/control/**",
 )
 
 # dotted call names that block the calling thread

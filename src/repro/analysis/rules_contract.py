@@ -40,6 +40,7 @@ from repro.analysis.engine import (
 _SERVING_TARGETS = (
     "src/repro/gateway/**",
     "src/repro/obs/**",
+    "src/repro/control/**",
 )
 
 # framing fields both sides handle generically — never part of a diff

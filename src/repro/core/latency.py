@@ -68,6 +68,29 @@ def fpga_latency_ms(
     return LatencyEstimate(timesteps=timesteps, cycles=cycles, ms=ms, schedule=schedule)
 
 
+def serving_floor_ms(
+    cfg: LSTMAEConfig,
+    timesteps: int,
+    *,
+    rh_m: int | None = None,
+    arch: str | None = None,
+    schedule: str = "dataflow",
+) -> float:
+    """Model-predicted compute floor (ms) for one served bucket shape.
+
+    The feedforward prior for the adaptive batching controller
+    (:mod:`repro.control`): the latency model bounds how fast a flush of
+    this bucket can possibly finish, so the controller subtracts the
+    floor from the declared p95 SLO and searches only the residual
+    (queueing + batching slack) instead of rediscovering physics by trial.
+    ``rh_m`` defaults to the paper's Table-1 reuse factor for ``arch``
+    (1 when the arch is unknown).
+    """
+    if rh_m is None:
+        rh_m = PAPER_RH_M.get(arch or "", 1)
+    return fpga_latency_ms(cfg, int(timesteps), int(rh_m), schedule=schedule).ms
+
+
 def energy_per_timestep_mj(latency_ms: float, timesteps: int, platform: str) -> float:
     return POWER_W[platform] * latency_ms / max(1, timesteps)
 

@@ -100,6 +100,11 @@ class AnomalyGateway:
         # enable_durability() attaches a DurableSessions coordinator here
         # and the transport/stats pick it up; None keeps PR-5 semantics
         self.durability = None
+        # the control plane is opt-in the same way: repro.control's
+        # enable_control() attaches a GatewayControl here (priority
+        # admission gate on submit(), SLO batching ticks on the pump);
+        # None keeps flat admission and static knobs
+        self.control = None
         # observability plane: per-stage histograms gate on ``obs_detail``
         # (the obs_overhead benchmark's off arm), the tracer produces
         # spans for requests that opt in with a wire ``trace`` field, and
@@ -131,7 +136,13 @@ class AnomalyGateway:
 
     # -- one-shot scoring (micro-batcher) ---------------------------------
 
-    def submit(self, series) -> Ticket:
+    def submit(self, series, *, priority=None, tenant=None) -> Ticket:
+        """Enqueue one (T, F) window.  ``priority`` (0 = highest) and
+        ``tenant`` are consulted only when a control plane is attached —
+        without one (or with ``priority=None``) this is exactly the flat
+        PR-5 path: first come, first queued, shed at ``max_queue``."""
+        if self.control is not None:
+            self.control.admit(priority=priority, tenant=tenant)
         return self.batcher.submit(series)
 
     def pump(self, now: Optional[float] = None) -> int:
@@ -250,6 +261,8 @@ class AnomalyGateway:
             }
         if self.durability is not None:
             out["durability"] = self.durability.describe()
+        if self.control is not None:
+            out["control"] = self.control.describe()
         return out
 
     def __repr__(self) -> str:

@@ -198,17 +198,27 @@ class GatewayClient:
 
     # -- one-shot scoring --------------------------------------------------
 
-    def submit(self, series) -> int:
+    def submit(self, series, *, priority: Optional[int] = None,
+               tenant: Optional[str] = None) -> int:
         """Fire a one-shot score request; returns its id for
-        :meth:`collect` (responses arrive on the server's flush cadence)."""
-        return self._send(
-            {"op": "score", "series": np.asarray(series, np.float32).tolist()}
-        )
+        :meth:`collect` (responses arrive on the server's flush cadence).
+        ``priority`` (0 = highest class) and ``tenant`` feed the server's
+        admission controller when one is attached; both are omitted from
+        the wire payload when None, so legacy traffic is byte-identical."""
+        payload = {"op": "score",
+                   "series": np.asarray(series, np.float32).tolist()}
+        if priority is not None:
+            payload["priority"] = int(priority)
+        if tenant is not None:
+            payload["tenant"] = str(tenant)
+        return self._send(payload)
 
-    def score(self, series) -> float:
+    def score(self, series, *, priority: Optional[int] = None,
+              tenant: Optional[str] = None) -> float:
         """Submit one window and block for its score."""
-        return float(self.request("score", series=np.asarray(
-            series, np.float32).tolist())["score"])
+        return float(self.collect(
+            self.submit(series, priority=priority, tenant=tenant)
+        )["score"])
 
     def traced_score(self, series) -> dict:
         """One-shot score carrying a trace id, returning the full span.

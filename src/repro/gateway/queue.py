@@ -177,6 +177,28 @@ class MicroBatcher:
     def queue_depth(self) -> int:
         return self._depth
 
+    # -- control-plane actuation ------------------------------------------
+
+    def set_knobs(
+        self,
+        max_batch: Optional[int] = None,
+        max_wait_ms: Optional[float] = None,
+    ) -> dict:
+        """Adjust the batching knobs at runtime; returns the applied values.
+
+        ``max_batch`` is clamped to ``[1, lanes]`` — the lane count (and
+        with it every compiled (lanes, bucket_T, F) shape) was fixed at
+        construction, so a controller can move the flush trigger freely
+        without ever minting a new compiled program.  ``max_wait_ms`` is
+        continuous and unconstrained (floored at 0).  Buckets already
+        fuller than a lowered ``max_batch`` drain on the next pump.
+        """
+        if max_batch is not None:
+            self.max_batch = min(max(1, int(max_batch)), self.lanes)
+        if max_wait_ms is not None:
+            self.max_wait_ms = max(0.0, float(max_wait_ms))
+        return {"max_batch": self.max_batch, "max_wait_ms": self.max_wait_ms}
+
     # -- intake -----------------------------------------------------------
 
     def submit(self, series) -> Ticket:

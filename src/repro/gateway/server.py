@@ -30,7 +30,13 @@ request                 response
 "series": [[..] ..]}``  "alert": ..?}`` — one-shot (T, F) window through
                         the micro-batcher; the response is written when
                         the ticket's future completes (flush by size,
-                        by the background pump, or at drain).
+                        by the background pump, or at drain).  Optional
+                        ``priority`` (int, 0 = highest class) and
+                        ``tenant`` (string) fields feed the admission
+                        controller when a control plane is attached;
+                        both are ignored otherwise (backward compatible
+                        like ``trace``) and omitting them is exactly
+                        the pre-control wire protocol.
 ``{"op":                ``{"ok": true, "op": "recalibrate",
 "recalibrate",          "threshold": .., "params_swapped": false}`` —
 "threshold": ..}``      live threshold swap, resident sessions keep
@@ -316,6 +322,10 @@ class GatewayServer:
                     # cadence snapshots ride the pump: skip (never block)
                     # while the previous background write is in flight
                     self.gateway.durability.maybe_snapshot()
+                if self.gateway.control is not None:
+                    # control ticks ride the pump too: the controller
+                    # rate-limits itself via its tick interval
+                    self.gateway.control.maybe_tick()
             except Exception:
                 logger.exception("background pump failed; queue state kept")
             await asyncio.sleep(self.pump_interval_s)
@@ -521,7 +531,10 @@ class _Connection:
             # size-trigger flush is attributed to the ticket's own
             # queue_wait/assemble/compute stages, never double-counted
             span.mark("dispatch")
-        ticket = self.gateway.submit(series)  # overload/shape errors -> dispatch
+        # optional admission fields (None for legacy clients -> flat path)
+        ticket = self.gateway.submit(
+            series, priority=req.get("priority"), tenant=req.get("tenant"),
+        )  # overload/shape/shed errors -> dispatch error path
 
         def _completed(t) -> None:
             if t.failed:

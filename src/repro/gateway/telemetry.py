@@ -38,6 +38,61 @@ from repro.obs.histogram import Histogram
 # the request-latency histogram's key in ``Telemetry.histograms``
 REQUEST_HIST = "request_ms"
 
+# counters whose short-horizon rates feed the control plane (sliding
+# window, not lifetime averages — see _RateWindow)
+_WINDOWED_COUNTERS = ("queue.submitted", "queue.completed")
+
+
+class _RateWindow:
+    """Sliding-window event rate from a ring of per-interval counters.
+
+    Lifetime rates (``count / uptime``) answer "how busy has this process
+    been since boot" — useless to a controller that must react to the
+    arrival rate *now*.  This ring holds one counter per fixed interval;
+    ``add`` credits the interval containing ``now`` (zeroing any
+    intervals skipped since the last event) and ``rate`` divides the
+    ring's sum by the window span, clipped to the time actually elapsed
+    since construction so the estimate is unbiased while the ring is
+    still filling.
+    """
+
+    __slots__ = ("interval_s", "intervals", "_counts", "_last_idx", "_t_start")
+
+    def __init__(self, t_start: float, window_s: float = 10.0, intervals: int = 20):
+        if window_s <= 0 or intervals < 1:
+            raise ValueError("window_s must be > 0 and intervals >= 1")
+        self.interval_s = window_s / intervals
+        self.intervals = intervals
+        self._counts = [0.0] * intervals
+        self._last_idx = int(t_start / self.interval_s)
+        self._t_start = t_start
+
+    @property
+    def window_s(self) -> float:
+        return self.interval_s * self.intervals
+
+    def _advance(self, now: float) -> int:
+        idx = int(now / self.interval_s)
+        if idx > self._last_idx:
+            # zero every interval skipped since the last event; a gap
+            # longer than the ring clears it entirely
+            for i in range(self._last_idx + 1,
+                           min(idx, self._last_idx + self.intervals) + 1):
+                self._counts[i % self.intervals] = 0.0
+            self._last_idx = idx
+        return idx
+
+    def add(self, now: float, n: float = 1.0) -> None:
+        idx = self._advance(now)
+        self._counts[idx % self.intervals] += n
+
+    def rate(self, now: float) -> float:
+        """Events per second over the trailing window (clipped to the
+        elapsed time while the ring is younger than one full window)."""
+        self._advance(now)
+        span = min(self.window_s, max(now - self._t_start, self.interval_s))
+        return sum(self._counts) / span
+
 
 def percentile(sorted_vals: list, p: float) -> float:
     """Nearest-rank percentile of an ascending list (0 when empty)."""
@@ -61,6 +116,7 @@ class Telemetry:
         self,
         clock: Callable[[], float] = time.monotonic,
         detail: bool = True,
+        rate_window_s: float = 10.0,
     ):
         self._clock = clock
         self.detail = bool(detail)
@@ -71,6 +127,11 @@ class Telemetry:
         # explicit uptime epoch: rates are well-defined immediately, and
         # reset() re-arms it (no lazy first-event initialization)
         self._t0: float = clock()
+        self._rate_window_s = float(rate_window_s)
+        self._windows: dict[str, _RateWindow] = {
+            name: _RateWindow(self._t0, self._rate_window_s)
+            for name in _WINDOWED_COUNTERS
+        }
 
     # -- recording --------------------------------------------------------
 
@@ -81,6 +142,9 @@ class Telemetry:
 
     def count(self, name: str, n: float = 1) -> None:
         self.counters[name] += n
+        win = self._windows.get(name)
+        if win is not None:
+            win.add(self._clock(), n)
 
     def gauge(self, name: str, value: float) -> None:
         self.gauges[name] = float(value)
@@ -118,6 +182,10 @@ class Telemetry:
         self.gauge_vecs.clear()
         self.histograms.clear()
         self._t0 = self._clock()
+        self._windows = {
+            name: _RateWindow(self._t0, self._rate_window_s)
+            for name in _WINDOWED_COUNTERS
+        }
 
     def record_batch(self, filled: int, slots: int, wait_ms: float = 0.0) -> None:
         """One micro-batch flush: ``filled`` real requests in ``slots``
@@ -153,6 +221,12 @@ class Telemetry:
     def uptime_s(self) -> float:
         return max(self._clock() - self._t0, 1e-9)
 
+    def windowed_rate(self, name: str) -> float:
+        """Sliding-window rate (events/s) for a windowed counter; 0.0 for
+        counters outside ``_WINDOWED_COUNTERS``."""
+        win = self._windows.get(name)
+        return win.rate(self._clock()) if win is not None else 0.0
+
     def stats(self) -> dict:
         c = self.counters
         flushes = c.get("batch.flushes", 0.0)
@@ -178,4 +252,8 @@ class Telemetry:
             "histograms": {k: h.to_dict() for k, h in self.histograms.items()},
             "requests_per_s": c.get("queue.completed", 0.0) / up,
             "stream_steps_per_s": steps / up,
+            # windowed (short-horizon) rates — what the control plane
+            # actuates on; the two keys above are lifetime averages
+            "arrival_rps_window": self.windowed_rate("queue.submitted"),
+            "completed_rps_window": self.windowed_rate("queue.completed"),
         }

@@ -30,8 +30,9 @@ hardware does — by replication:
 
 Control-plane message shapes (one ``multiprocessing.Pipe`` per worker):
 
-  supervisor -> worker   ``{"id", "op": stats|recalibrate|shutdown|ping,
-                         "kw": {...}}`` -> ``{"id", "result"|"error"}``
+  supervisor -> worker   ``{"id", "op": stats|recalibrate|control|
+                         shutdown|ping, "kw": {...}}`` ->
+                         ``{"id", "result"|"error"}``
   worker -> supervisor   ``{"event": ready|heartbeat|drained|error, ...}``
                          and ``{"wid", "op": aggregate|recalibrate_all,
                          "kw"}`` -> ``{"wid", "result"|"error"}`` — how a
@@ -146,6 +147,11 @@ class _WorkerControl:
                     kw = dict(kw)
                     kw["params"] = jax.tree.map(jnp.asarray, kw["params"])
                 result = self.gateway.recalibrate(**kw)
+            elif op == "control":
+                # batching-knob fan-out from the supervisor's control
+                # loop; same path recalibrate takes, applied to the
+                # batcher (clamped to the pre-compiled lane count)
+                result = self.gateway.batcher.set_knobs(**kw)
             elif op == "shutdown":
                 self.stop_event.set()
                 result = {"ok": True}
@@ -352,6 +358,10 @@ class _Worker:
         self.error: Optional[str] = None
         self.last_active = 0
         self.last_queue_depth = 0
+        # set (under the front lock) the moment a scale-down picks this
+        # worker: the monitor must not respawn its exit, and fan-outs /
+        # stats must stop counting it BEFORE its SIGTERM lands
+        self.scaling_down = False
         self.drain_summary: Optional[dict] = None
         self.exitcode: Optional[int] = None
         self.send_lock = threading.Lock()
@@ -468,7 +478,15 @@ class WorkerFront:
         self.restarts = 0
         self.sessions_lost = 0
         self.sessions_migrated = 0
+        # autoscaling state: target_workers is the controller's current
+        # setpoint (starts at the configured count); the control plane
+        # (repro.control.ControlLoop) attaches itself here when enabled
+        self.target_workers = n_workers
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.control = None
         self._last_recalibrate: Optional[dict] = None
+        self._last_batching: Optional[dict] = None
         self._ctx = mp.get_context("spawn")  # never fork a JAX parent
         self._workers: dict[int, _Worker] = {}
         self._reserve: Optional[socket.socket] = None
@@ -651,7 +669,9 @@ class WorkerFront:
         """Watch worker sentinels; respawn crashed workers (same index,
         same port) with session-loss accounting."""
         while not self._shutting_down:
-            sentinels = {w.proc.sentinel: w for w in self._workers.values()
+            with self._lock:  # scale_down() removes entries concurrently
+                workers = list(self._workers.values())
+            sentinels = {w.proc.sentinel: w for w in workers
                          if w.proc.is_alive()}
             if not sentinels:
                 time.sleep(0.05)
@@ -661,8 +681,10 @@ class WorkerFront:
                 w = sentinels[s]
                 w.proc.join(1.0)
                 w.exitcode = w.proc.exitcode
-                if self._shutting_down or w.drain_summary is not None:
+                if self._shutting_down or w.drain_summary is not None \
+                        or w.scaling_down:
                     continue  # a drained exit is handled by shutdown()
+                    # (or by scale_down(), which owns its worker's drain)
                 # with a snapshot store the victim's residents are not
                 # lost — any worker can resume them from its shard — so
                 # only count them against a front running without one
@@ -708,16 +730,27 @@ class WorkerFront:
             logger.error("respawned worker %d never became ready",
                          worker.index)
             return
-        if self._last_recalibrate is None or self._shutting_down:
+        if self._shutting_down:
             return
-        try:
-            self._request(worker, "recalibrate", **self._last_recalibrate)
-            logger.info("worker %d: replayed live recalibration after "
-                        "respawn", worker.index)
-        except Exception:
-            logger.exception("worker %d: recalibration replay failed — "
-                             "this acceptor serves factory thresholds",
-                             worker.index)
+        if self._last_recalibrate is not None:
+            try:
+                self._request(worker, "recalibrate", **self._last_recalibrate)
+                logger.info("worker %d: replayed live recalibration after "
+                            "respawn", worker.index)
+            except Exception:
+                logger.exception("worker %d: recalibration replay failed — "
+                                 "this acceptor serves factory thresholds",
+                                 worker.index)
+        if self._last_batching is not None:
+            # same reasoning as recalibrate: a respawn rebuilds from the
+            # factory's static knobs, which would quietly revert one
+            # acceptor to the pre-adaptation operating point
+            try:
+                self._request(worker, "control", **self._last_batching)
+            except Exception:
+                logger.exception("worker %d: batching-knob replay failed — "
+                                 "this acceptor serves factory knobs",
+                                 worker.index)
 
     # -- control fan-out ---------------------------------------------------
 
@@ -747,8 +780,12 @@ class WorkerFront:
         workers asked — callers that need all-or-nothing semantics
         (recalibrate) compare the two.  A worker mid-crash is skipped —
         the monitor is already respawning it."""
-        targets = [w for w in self._workers.values()
-                   if w.proc.is_alive() and w.ready.is_set()]
+        with self._lock:  # snapshot: scale_down() mutates the map; its
+            # scaling_down flag excludes the departing worker the moment
+            # the decision lands, so no fan-out targets a draining worker
+            targets = [w for w in self._workers.values()
+                       if w.proc.is_alive() and w.ready.is_set()
+                       and not w.scaling_down]
         slots: list = [None] * len(targets)
 
         def _one(i: int, w: _Worker) -> None:
@@ -767,10 +804,12 @@ class WorkerFront:
 
     @property
     def alive_workers(self) -> int:
-        return sum(1 for w in self._workers.values() if w.proc.is_alive())
+        with self._lock:
+            return sum(1 for w in self._workers.values() if w.proc.is_alive())
 
     def worker_pids(self) -> list[int]:
-        return [w.pid for w in self._workers.values() if w.proc.is_alive()]
+        with self._lock:
+            return [w.pid for w in self._workers.values() if w.proc.is_alive()]
 
     def stats(self) -> dict:
         """Aggregated front telemetry: per-worker ``gateway.stats()``
@@ -799,6 +838,9 @@ class WorkerFront:
             "workers": {
                 "count": len(results),
                 "configured": self.n_workers,
+                "target": self.target_workers,
+                "scale_ups": self.scale_ups,
+                "scale_downs": self.scale_downs,
                 "restarts": self.restarts,
                 "sessions_lost": self.sessions_lost,
                 "sessions_migrated": self.sessions_migrated,
@@ -809,7 +851,10 @@ class WorkerFront:
         }
         for key in ("capacity", "active_streams", "queue_depth"):
             agg[key] = int(sum(int(s.get(key, 0)) for _, s in results))
-        for key in ("requests_per_s", "stream_steps_per_s"):
+        # lifetime averages AND windowed rates both sum across workers
+        # (the control plane reads the windowed keys)
+        for key in ("requests_per_s", "stream_steps_per_s",
+                    "arrival_rps_window", "completed_rps_window"):
             agg[key] = sum(float(s.get(key, 0.0)) for _, s in results)
         filled = counters.get("batch.filled", 0.0)
         slots = counters.get("batch.slots", 0.0)
@@ -829,6 +874,8 @@ class WorkerFront:
             for key in ("schedule", "threshold", "features", "max_batch",
                         "max_seq_len"):
                 agg[key] = first.get(key)
+        if self.control is not None:
+            agg["control"] = self.control.describe()
         return agg
 
     def recalibrate(self, *, threshold=_UNSET, params=None, **kw) -> dict:
@@ -881,6 +928,147 @@ class WorkerFront:
         out["workers"] = len(results)
         return out
 
+    def set_batching(self, max_batch: Optional[int] = None,
+                     max_wait_ms: Optional[float] = None) -> dict:
+        """Fan adjusted batching knobs out to every live worker (the
+        control plane's actuation path; each worker clamps ``max_batch``
+        to its pre-compiled lane count).  Best-effort by design — a
+        worker mid-respawn picks the knobs up from the replay in
+        ``_finish_respawn`` — and the last applied knobs are remembered
+        for exactly that replay.  Returns the first worker's applied
+        values plus the reach count."""
+        kw = {}
+        if max_batch is not None:
+            kw["max_batch"] = int(max_batch)
+        if max_wait_ms is not None:
+            kw["max_wait_ms"] = float(max_wait_ms)
+        if not kw:
+            raise ValueError("nothing to set: pass max_batch or max_wait_ms")
+        results, attempted = self._fan_out("control", **kw)
+        with self._lock:
+            merged = dict(self._last_batching or {})
+            merged.update(kw)
+            self._last_batching = merged
+        out = dict(results[0][1]) if results else dict(kw)
+        out["workers"] = len(results)
+        out["attempted"] = attempted
+        return out
+
+    # -- autoscaling -------------------------------------------------------
+
+    def scale_up(self, ready_timeout: float = 180.0) -> dict:
+        """Add one worker (lowest unused index) on the same shared port.
+
+        Reuses the respawn machinery: the new worker builds from the
+        factory, then the live recalibration and batching knobs are
+        replayed onto it so it serves the front's CURRENT operating
+        point, not factory state.  Blocks until the worker is ready (it
+        only starts taking kernel-balanced connections once it listens).
+        """
+        if not self._started:
+            raise RuntimeError("front not started")
+        with self._lock:
+            if self._shutting_down:
+                raise RuntimeError("front is shutting down")
+            index = 0
+            while index in self._workers:
+                index += 1
+            self.target_workers = len(self._workers) + 1
+            self.scale_ups += 1
+        self._spawn(index)
+        worker = self._workers[index]
+        if not worker.ready.wait(ready_timeout):
+            raise TimeoutError(
+                f"scale-up worker {index} not ready after {ready_timeout:.0f}s"
+                f" ({worker.error or 'no error reported'})"
+            )
+        if worker.error is not None:
+            raise RuntimeError(f"scale-up worker {index} failed: {worker.error}")
+        for op, kw in (("recalibrate", self._last_recalibrate),
+                       ("control", self._last_batching)):
+            if kw is not None:
+                try:
+                    self._request(worker, op, **kw)
+                except Exception:
+                    logger.exception("worker %d: %s replay after scale-up "
+                                     "failed", index, op)
+        self._events.emit("scale_up", worker=index, pid=worker.pid,
+                          workers=self.alive_workers)
+        return {"index": index, "pid": worker.pid,
+                "workers": self.alive_workers}
+
+    def scale_down(self, timeout: float = 60.0) -> dict:
+        """Remove one worker (highest live index) via the zero-drop drain.
+
+        This is the PR-6 coordinated drain applied to a single worker,
+        never a kill: the victim stops being a fan-out/stats target the
+        moment it is chosen (``scaling_down``, set under the lock —
+        capacity figures update atomically with the decision, so no
+        admission-facing snapshot ever counts a departing worker), gets
+        SIGTERM, answers every pending ticket, hands its resident
+        sessions off to the snapshot store when durability is on, and
+        reports the same summary fields a full-front shutdown reports:
+        ``dropped_tickets`` / ``sessions_migrated`` / ``sessions_lost``.
+        """
+        if not self._started:
+            raise RuntimeError("front not started")
+        with self._lock:
+            live = [w for w in self._workers.values()
+                    if w.proc.is_alive() and w.ready.is_set()
+                    and not w.scaling_down]
+            if len(live) <= 1:
+                raise RuntimeError(
+                    f"cannot scale below one worker ({len(live)} live)"
+                )
+            victim = max(live, key=lambda w: w.index)
+            victim.scaling_down = True
+            self.target_workers = len(live) - 1
+            self.scale_downs += 1
+        try:
+            os.kill(victim.pid, signal.SIGTERM)
+        except (ProcessLookupError, OSError):
+            pass
+        victim.proc.join(timeout)
+        if victim.proc.is_alive():
+            logger.error("worker %d did not drain in %.0fs during "
+                         "scale-down; terminating", victim.index, timeout)
+            victim.proc.terminate()
+            victim.proc.join(5.0)
+        victim.exitcode = victim.proc.exitcode
+        if victim.exitcode == 0 and victim.drain_summary is None:
+            # same settle as shutdown(): the reader thread may not have
+            # consumed the buffered "drained" event yet
+            settle = time.monotonic() + 2.0
+            while victim.drain_summary is None and time.monotonic() < settle:
+                time.sleep(0.01)
+        summary = victim.drain_summary
+        clean = victim.exitcode == 0 and summary is not None
+        if clean:
+            dropped = int(summary.get("pending_after_drain", 0))
+            migrated = int(summary.get("sessions_migrated", 0))
+            lost = int(summary.get("sessions_lost", 0))
+        else:
+            dropped = victim.last_queue_depth
+            migrated = 0
+            lost = victim.last_active
+        with self._lock:
+            self._workers.pop(victim.index, None)
+            self.sessions_migrated += migrated
+            self.sessions_lost += lost
+        self._events.emit("scale_down", worker=victim.index,
+                          pid=victim.pid, clean=clean,
+                          dropped_tickets=dropped,
+                          sessions_migrated=migrated, sessions_lost=lost,
+                          workers=self.alive_workers)
+        return {
+            "index": victim.index, "pid": victim.pid,
+            "exitcode": victim.exitcode, "clean": clean,
+            "dropped_tickets": dropped,
+            "sessions_migrated": migrated,
+            "sessions_lost": lost,
+            "workers": self.alive_workers,
+        }
+
     # -- shutdown ----------------------------------------------------------
 
     def shutdown(self, timeout: float = 120.0) -> dict:
@@ -896,8 +1084,16 @@ class WorkerFront:
         if not self._started:
             raise RuntimeError("front not started")
         self._shutting_down = True
+        if self.control is not None:
+            try:  # stop the control thread first: no scale decisions
+                self.control.stop()  # may race a drain in progress
+            except Exception:
+                logger.exception("control loop stop failed during shutdown")
+            self.control = None
         deadline = time.monotonic() + timeout
-        for w in self._workers.values():
+        with self._lock:
+            workers = list(self._workers.values())
+        for w in workers:
             if not w.proc.is_alive():
                 continue
             # a worker still booting (e.g. just respawned) has no signal
@@ -908,14 +1104,16 @@ class WorkerFront:
             try:
                 os.kill(w.pid, signal.SIGTERM)
             except (ProcessLookupError, OSError):
-                pass
+                # already exited — the goal state; join below records it
+                logger.debug("worker %d: SIGTERM at shutdown found it gone",
+                             w.index)
         exits = []
         dropped = 0
         counters: dict[str, float] = {}
         clean = 0
         migrated = 0
         drain_lost = 0
-        for w in self._workers.values():
+        for w in workers:
             w.proc.join(max(0.1, deadline - time.monotonic()))
             if w.proc.is_alive():  # a worker stuck mid-drain: last resort
                 logger.error("worker %d did not drain in time; terminating",
@@ -969,7 +1167,9 @@ class WorkerFront:
                           sessions_lost=self.sessions_lost + drain_lost)
         self._events.close()
         return {
-            "workers": self.n_workers,
+            # the workers present AT shutdown (autoscaling may have moved
+            # the fleet away from the configured n_workers)
+            "workers": len(workers),
             "clean_exits": clean,
             "dropped_tickets": dropped,
             "restarts": self.restarts,
@@ -1029,6 +1229,9 @@ def default_gateway_factory(
     max_queue: int = 1024,
     mesh: int = 1,
     warm_seq_len: int = 0,
+    priority_classes: int = 1,
+    tenant_rate: Optional[float] = None,
+    tenant_burst: Optional[float] = None,
 ) -> "object":
     """Picklable per-worker gateway builder (the launcher's ``--workers``,
     benchmarks, smoke, tests).
@@ -1059,6 +1262,16 @@ def default_gateway_factory(
         svc.calibrate(fit_cfg)
     gw = svc.open_gateway(capacity=capacity, max_batch=max_batch,
                           max_wait_ms=max_wait_ms, max_queue=max_queue)
+    if priority_classes > 1 or tenant_rate is not None:
+        # worker-side admission: shedding must happen where requests
+        # arrive.  Batching/autoscaling run supervisor-side (ControlLoop)
+        # so no SLO here — this gateway's control is admission-only.
+        from repro.control import ControlConfig, enable_control
+
+        enable_control(gw, ControlConfig(
+            priority_classes=priority_classes,
+            tenant_rate=tenant_rate, tenant_burst=tenant_burst,
+        ))
     if warm_seq_len > 0:
         warm = np.zeros((max_batch, warm_seq_len, svc.features), np.float32)
         gw.score(list(warm))

@@ -217,6 +217,76 @@ def run_cell(arch: str, shape: ShapeConfig, multi_pod: bool, out_dir: Path,
     return record
 
 
+def placement_report(args) -> dict:
+    """Offline serving roofline for one gateway placement: per-shard
+    micro-batch geometry + the Eq-1 latency floor, then the autoscaler
+    bounds (``--autoscale MIN:MAX``) that cover ``--target-rps`` — so a
+    control-plane deployment can be sanity-checked before any worker is
+    forked.  Purely analytic (latency model, no compile)."""
+    import math
+
+    from repro.config import reduced_config
+    from repro.core.latency import PAPER_RH_M, serving_floor_ms
+    from repro.engine import Placement
+    from repro.gateway.queue import bucket_for
+
+    if not args.arch:
+        raise SystemExit("--placement needs --arch")
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if cfg.family != "lstm_ae":
+        raise SystemExit(f"--placement reports on LSTM-AE archs, "
+                         f"not {cfg.family}")
+    pl = Placement.from_spec(args.placement)
+    lanes = pl.pad_rows(args.max_batch)
+    rows_per_shard = lanes // pl.data_shards
+    t_bucket = bucket_for(args.seq_len)
+    floor_ms = serving_floor_ms(cfg.lstm_ae, t_bucket, arch=args.arch)
+    # per-worker sustainable rate: one full flush per floor, derated 50%
+    # for assemble/wire overheads (matches repro.control's estimate)
+    worker_rps = 0.5 * lanes / (max(floor_ms, 1e-3) / 1e3)
+    report = {
+        "arch": args.arch,
+        "placement": str(pl),
+        "data_shards": pl.data_shards,
+        "lanes": lanes,
+        "rows_per_shard": rows_per_shard,
+        "bucket_T": t_bucket,
+        "floor_ms": floor_ms,
+        "worker_rps": worker_rps,
+        "eq1_calibrated": args.arch in PAPER_RH_M,
+    }
+    print(f"[dryrun] placement {pl!r}: {lanes} micro-batch lanes "
+          f"({rows_per_shard}/shard x {pl.data_shards} shards), "
+          f"bucket T={t_bucket}: floor={floor_ms:.3f} ms/flush, "
+          f"~{worker_rps:,.0f} req/s per worker", flush=True)
+    if args.slo_p95_ms is not None:
+        budget = args.slo_p95_ms - floor_ms
+        report["slo_p95_ms"] = args.slo_p95_ms
+        report["slo_budget_ms"] = budget
+        verdict = ("feasible" if budget > 0 else "INFEASIBLE")
+        print(f"[dryrun] SLO p95={args.slo_p95_ms:.1f} ms: {verdict} "
+              f"(compute floor {floor_ms:.3f} ms leaves "
+              f"{budget:.3f} ms queueing budget)", flush=True)
+    if args.target_rps is not None:
+        lo = max(1, math.ceil(args.target_rps / worker_rps))
+        # headroom for 2x bursts, the shape the bursty trace benchmark
+        # stresses; never below lo
+        hi = max(lo, math.ceil(2.0 * args.target_rps / worker_rps))
+        report["target_rps"] = args.target_rps
+        report["autoscale_min"] = lo
+        report["autoscale_max"] = hi
+        print(f"[dryrun] target {args.target_rps:,.0f} req/s: recommend "
+              f"--autoscale {lo}:{hi} (steady-state {lo} worker(s) at "
+              f"{args.target_rps / (lo * worker_rps):.0%} utilization)",
+              flush=True)
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"placement__{args.arch}__data{pl.data_shards}.json"
+    out_path.write_text(json.dumps(report, indent=1))
+    print(f"[dryrun] placement report -> {out_path}", flush=True)
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description="multi-pod dry-run launcher")
     ap.add_argument("--arch", default=None, help="architecture id (default: all)")
@@ -226,7 +296,30 @@ def main() -> None:
     ap.add_argument("--opt", action="store_true",
                     help="apply §Perf optimizations (baseline when absent)")
     ap.add_argument("--list", action="store_true", help="list cells and exit")
+    ap.add_argument("--placement", default=None, metavar="data=N",
+                    help="serving mode: report the per-shard gateway "
+                         "roofline for this placement instead of "
+                         "compiling cells (with --arch; see README "
+                         "§Control plane)")
+    ap.add_argument("--target-rps", type=float, default=None,
+                    help="with --placement: arrival rate to cover; "
+                         "prints the recommended --autoscale MIN:MAX")
+    ap.add_argument("--slo-p95-ms", type=float, default=None,
+                    help="with --placement: check the declared p95 SLO "
+                         "against the Eq-1 compute floor")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="with --placement: gateway micro-batch flush "
+                         "size (pre-padding)")
+    ap.add_argument("--seq-len", type=int, default=64,
+                    help="with --placement: request length the floor is "
+                         "computed for (rounded up to its bucket)")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()
+
+    if args.placement:
+        placement_report(args)
+        return
 
     archs = [args.arch] if args.arch else list_archs()
     out_dir = Path(args.out)

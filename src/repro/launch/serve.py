@@ -18,7 +18,11 @@ Modes, per model family:
   tickets; the exit line reports per-worker clean exits and dropped
   tickets).  With ``--store-dir`` both transport modes serve DURABLE
   sessions: snapshots + signed resumption tokens, crash-resume on any
-  worker, drain-handoff (README §Durability).
+  worker, drain-handoff (README §Durability).  With ``--slo-p95-ms`` /
+  ``--priority-classes`` / ``--autoscale MIN:MAX`` either transport mode
+  runs the ADAPTIVE control plane (``repro.control``): SLO-driven
+  batching-knob tuning, priority-aware admission, and (workers mode)
+  drain-based worker autoscaling (README §Control plane).
 - LM families: batched prefill + greedy decode of a few tokens (reduced
   configs on CPU; full configs need a pod mesh).
 """
@@ -48,6 +52,42 @@ def engine_cfg_for(args) -> "object":
         return args.schedule
     return EngineConfig(
         schedule=args.schedule, placement=Placement.from_spec(args.mesh)
+    )
+
+
+def parse_autoscale(spec):
+    """``--autoscale MIN:MAX`` -> ``(min, max)`` worker bounds (or None)."""
+    if not spec:
+        return None
+    try:
+        lo, hi = (int(p) for p in spec.split(":", 1))
+    except ValueError:
+        raise SystemExit(f"--autoscale expects MIN:MAX, got {spec!r}")
+    if lo < 1 or hi < lo:
+        raise SystemExit(f"--autoscale needs 1 <= MIN <= MAX, got {spec!r}")
+    return lo, hi
+
+
+def control_cfg_for(args, *, autoscale=None):
+    """The :class:`repro.control.ControlConfig` this invocation asked
+    for, or None when no control-plane flag is set (legacy behaviour:
+    flat admission, static knobs, fixed fleet)."""
+    wants = (args.slo_p95_ms is not None or args.priority_classes > 1
+             or args.tenant_rate is not None or autoscale is not None)
+    if not wants:
+        return None
+    from repro.control import ControlConfig
+
+    return ControlConfig(
+        slo_p95_ms=args.slo_p95_ms,
+        tick_interval_s=args.control_tick_s,
+        priority_classes=args.priority_classes,
+        tenant_rate=args.tenant_rate,
+        autoscale_min=autoscale[0] if autoscale else None,
+        autoscale_max=autoscale[1] if autoscale else None,
+        floor_timesteps=args.seq_len,
+        arch=args.arch,
+        extra={"max_wait_ms": args.max_wait_ms},
     )
 
 
@@ -132,9 +172,12 @@ def serve_gateway(cfg, args) -> None:
           f"p50={s['latency_ms']['p50']:.2f}ms, "
           f"p95={s['latency_ms']['p95']:.2f}ms)"
           + (f", alerts={alerts}" if svc.threshold is not None else ""))
+    # rates: lifetime averages for the run summary, plus the sliding
+    # 10 s window the control plane actually steers on
     print(f"[gateway] stats: schedule={s['schedule']} "
           f"stream_steps_per_s={s['stream_steps_per_s']:,.0f} "
           f"requests_per_s={s['requests_per_s']:,.0f} "
+          f"arrival_rps_window={s['arrival_rps_window']:,.0f} "
           f"rejected={s['counters'].get('queue.rejected', 0):.0f}")
 
 
@@ -163,6 +206,11 @@ def serve_http(cfg, args) -> None:
     if args.event_dir:
         gw.attach_event_log(os.path.join(args.event_dir, "server.jsonl"))
         gw.events.emit("boot", pid=os.getpid())
+    ccfg = control_cfg_for(args)
+    if ccfg is not None:
+        from repro.control import enable_control
+
+        enable_control(gw, ccfg, event_dir=args.event_dir or None)
     metrics = None
     if args.metrics_port is not None:
         from repro.obs import MetricsServer
@@ -175,11 +223,16 @@ def serve_http(cfg, args) -> None:
         mesh = (f", mesh={gw.placement.data_shards}x{gw.placement.data_axis}"
                 if gw.placement.is_sharded else "")
         durable = f", store={args.store_dir}" if args.store_dir else ""
+        control = ""
+        if gw.control is not None:
+            control = (f", slo_p95_ms={args.slo_p95_ms}, "
+                       f"priority_classes={args.priority_classes}")
         scrape = f" metrics_port={metrics.port}" if metrics else ""
         print(f"[http] listening on {srv.host}:{srv.port}{scrape} "
               f"(schedule={gw.engine.schedule.tag}, capacity={gw.pool.capacity}, "
               f"max_batch={gw.batcher.max_batch}, "
-              f"max_wait_ms={gw.batcher.max_wait_ms}{mesh}{durable})", flush=True)
+              f"max_wait_ms={gw.batcher.max_wait_ms}{mesh}{durable}"
+              f"{control})", flush=True)
 
     import asyncio
 
@@ -215,6 +268,11 @@ def serve_workers(cfg, args) -> None:
         # set XLA_FLAGS yourself and this passthrough stays out of the way
         env["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={mesh_ways}")
+    autoscale = parse_autoscale(args.autoscale)
+    n_workers = args.workers
+    if autoscale:
+        # start inside the declared bounds; the autoscaler moves from here
+        n_workers = min(max(n_workers, autoscale[0]), autoscale[1])
     front = WorkerFront(
         functools.partial(
             default_gateway_factory, args.arch, args.schedule,
@@ -222,20 +280,37 @@ def serve_workers(cfg, args) -> None:
             train_seq_len=args.seq_len, capacity=args.capacity,
             max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
             mesh=mesh_ways, warm_seq_len=args.seq_len,
+            priority_classes=args.priority_classes,
+            tenant_rate=args.tenant_rate,
         ),
-        n_workers=args.workers, host=args.host, port=args.port, env=env,
+        n_workers=n_workers, host=args.host, port=args.port, env=env,
         store_dir=args.store_dir or None,
         snapshot_interval_ms=args.snapshot_interval_ms,
         event_dir=args.event_dir or None,
         metrics_port=args.metrics_port,
     )
+    ccfg = control_cfg_for(args, autoscale=autoscale)
+    loop = None
+    if ccfg is not None and (ccfg.slo_p95_ms is not None or ccfg.autoscaling):
+        from repro.control import ControlLoop
+
+        loop = ControlLoop(front, ccfg, lanes=args.max_batch,
+                           model_cfg=cfg.lstm_ae,
+                           event_dir=args.event_dir or None)
 
     def _ready(f) -> None:
         scrape = f" metrics_port={f.metrics.port}" if f.metrics else ""
+        control = ""
+        if loop is not None:
+            loop.start()
+            bounds = (f" autoscale={autoscale[0]}:{autoscale[1]}"
+                      if autoscale else "")
+            control = (f" slo_p95_ms={args.slo_p95_ms}{bounds} "
+                       f"priority_classes={args.priority_classes}")
         print(f"[workers] listening on {f.host}:{f.port}{scrape} "
-              f"workers={args.workers} mesh={mesh_ways}xdata "
+              f"workers={n_workers} mesh={mesh_ways}xdata "
               f"(schedule={args.schedule}, capacity={args.capacity} and "
-              f"max_batch={args.max_batch} per worker)", flush=True)
+              f"max_batch={args.max_batch} per worker){control}", flush=True)
 
     summary = front.run_until_signal(on_ready=_ready)
     c = summary["counters"]
@@ -331,6 +406,28 @@ def main() -> None:
                          "see README §Durability)")
     ap.add_argument("--snapshot-interval-ms", type=float, default=1000.0,
                     help="durability snapshot cadence (with --store-dir)")
+    ap.add_argument("--slo-p95-ms", type=float, default=None,
+                    help="declare a p95 one-shot-latency SLO (ms): the "
+                         "control plane tunes max_batch/max_wait_ms each "
+                         "tick to meet it (--http / --workers; README "
+                         "§Control plane)")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="admission priority classes (1 = flat legacy "
+                         "admission).  Clients tag requests with "
+                         "'priority' 0..N-1; under overload the HIGHEST "
+                         "class number sheds first")
+    ap.add_argument("--tenant-rate", type=float, default=None,
+                    help="per-tenant token-bucket admission rate "
+                         "(requests/s; clients tag requests with "
+                         "'tenant')")
+    ap.add_argument("--autoscale", default=None, metavar="MIN:MAX",
+                    help="with --workers: let the supervisor's control "
+                         "loop scale the fleet between MIN and MAX "
+                         "workers from measured arrival rate and queue "
+                         "saturation (scale-down is a zero-drop "
+                         "snapshot-handoff drain)")
+    ap.add_argument("--control-tick-s", type=float, default=1.0,
+                    help="control-plane tick interval (seconds)")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="expose GET /metrics (Prometheus text) on this "
                          "port; 0 picks an ephemeral port (printed as "

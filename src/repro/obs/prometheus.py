@@ -40,6 +40,7 @@ _SCALAR_GAUGES = (
     "max_seq_len", "features", "threshold",
     "batch_fill_ratio", "mean_batch_wait_ms", "requests_per_s",
     "stream_steps_per_s", "workers",
+    "arrival_rps_window", "completed_rps_window",
 )
 
 
@@ -85,10 +86,16 @@ def render_stats(
             emit(key, "gauge", stats[key])
     workers = stats.get("workers")
     if isinstance(workers, Mapping):  # WorkerFront's aggregate section
-        for key in ("count", "configured", "restarts",
+        for key in ("count", "configured", "target", "restarts",
+                    "scale_ups", "scale_downs",
                     "sessions_lost", "sessions_migrated"):
             if isinstance(workers.get(key), (int, float)):
                 emit(f"workers_{key}", "gauge", workers[key])
+    control = stats.get("control")
+    if isinstance(control, Mapping):  # control-plane section (repro.control)
+        for key in ("ticks", "tick_interval_s", "slo_p95_ms", "floor_ms"):
+            if isinstance(control.get(key), (int, float)):
+                emit(f"control_{key}", "gauge", control[key])
     for name, value in sorted((stats.get("counters") or {}).items()):
         emit(f"{name}_total", "counter", value)
     for name, value in sorted((stats.get("gauges") or {}).items()):

@@ -275,3 +275,38 @@ def test_shutdown_drains_pending_tickets_across_workers():
                 c.close()
             except Exception:
                 pass
+
+
+# -- elastic fleet: scale-up replay + zero-drop scale-down ------------------
+
+
+def test_scale_up_then_scale_down_drains_clean():
+    """The autoscaler's actuation path: ``scale_up`` adds a live worker
+    on the shared port, ``scale_down`` retires exactly one via the
+    coordinated drain — zero dropped tickets, atomic worker accounting —
+    and the survivor keeps serving new connections."""
+    f = WorkerFront(functools.partial(_make_gateway), n_workers=1,
+                    heartbeat_ms=100.0)
+    try:
+        host, port = f.start(ready_timeout=180.0)
+        up = f.scale_up()
+        assert up["workers"] == 2
+        st = f.stats()["workers"]
+        assert st["count"] == 2 and st["target"] == 2
+        assert st["scale_ups"] == 1
+        with GatewayClient(host, port) as client:
+            scores = client.score_many([_series(60 + i, 8) for i in range(8)])
+        assert all(np.isfinite(s) for s in scores)
+        drain = f.scale_down()
+        assert drain["clean"] and drain["exitcode"] == 0
+        assert drain["dropped_tickets"] == 0
+        assert drain["workers"] == 1
+        st = f.stats()["workers"]
+        assert st["count"] == 1 and st["target"] == 1
+        assert st["scale_downs"] == 1
+        with GatewayClient(host, port) as client:  # survivor still serves
+            assert np.isfinite(client.score(_series(70, 6)))
+        with pytest.raises(RuntimeError, match="below one worker"):
+            f.scale_down()  # the floor: never drain the last worker
+    finally:
+        f.shutdown()
