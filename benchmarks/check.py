@@ -1,8 +1,9 @@
 """Benchmark regression gate: compare BENCH_*.json tables against
 committed baselines and fail CI on hot-path regressions.
 
-Four tables trend the serving stack (gateway, transport, sharding,
-workers); until this gate they were produced on every CI run and never
+The BENCH_*.json tables trend the serving stack (gateway, transport,
+the bp1 binary protocol, sharding, workers, durability, control plane,
+observability); until this gate they were produced on every CI run and never
 compared, so a regression in the pooled step, the wire path, the sharded
 flush or the worker tier could land silently.  This script reads each
 current table, pairs it with ``benchmarks/baselines/<same name>``, and

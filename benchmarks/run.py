@@ -17,10 +17,16 @@ the table-specific payload, ';'-separated).
                        one-stream-per-call baseline: stream-steps/sec per
                        pool size and schedule (``--json`` writes the rows
                        to a BENCH_gateway.json-style file for trending)
-  gateway_transport  — the asyncio JSON-lines transport vs in-process
-                       gateway calls: per-request wire overhead for
-                       one-shot scoring and session stepping
+  gateway_transport  — the asyncio socket transport (auto-negotiated,
+                       so bp1 binary frames) vs in-process gateway
+                       calls: per-request wire overhead for one-shot
+                       scoring and session stepping
                        (``--json BENCH_transport.json`` in CI)
+  gateway_binary     — bp1 binary frames vs the legacy JSON-lines
+                       protocol vs in-process on the same windows, plus
+                       a pipelining depth sweep (1/8/64 windows per
+                       frame) and the pipelined streaming path
+                       (``--json BENCH_binary.json`` in CI)
   gateway_sharding   — pooled gateway throughput vs data-mesh size 1/2/4
                        on forced host devices, fixed slots per device
                        (``--json BENCH_sharding.json`` in CI); each mesh
@@ -298,16 +304,19 @@ def gateway_throughput() -> list[str]:
 
 
 def gateway_transport() -> list[str]:
-    """Per-request overhead of the asyncio JSON-lines transport vs
+    """Per-request overhead of the asyncio socket transport vs
     in-process gateway calls (``--json BENCH_transport.json`` in CI).
 
-    ``transport.score.*`` — one-shot scoring: a client submits ``n_req``
-    mixed windows over a real socket (server-side micro-batching +
-    background pump) vs the same windows through ``gateway.score`` in
-    process.  ``transport.stream.*`` — per-timestep session stepping over
-    the wire vs in-process ``gateway.step``.  ``overhead_us`` is the added
-    wire+JSON cost per request — the price of not needing a caller-driven
-    pump loop.
+    The client is constructed with the default ``protocol="auto"`` so
+    this table prices what real callers get: the negotiated bp1 binary
+    protocol with pipelined submits (the JSON-lines fallback is priced
+    separately in ``gateway_binary``).  ``transport.score.*`` — one-shot
+    scoring: a client submits ``n_req`` mixed windows over a real socket
+    (server-side micro-batching + background pump) vs the same windows
+    through ``gateway.score`` in process.  ``transport.stream.*`` —
+    per-timestep session stepping over the wire vs in-process
+    ``gateway.step``.  ``overhead_us`` is the added wire+framing cost per
+    request — the price of not needing a caller-driven pump loop.
     """
     import numpy as np
 
@@ -369,6 +378,104 @@ def gateway_transport() -> list[str]:
         f"wire_sps={wire_sps:.0f};local_sps={local_sps:.0f};"
         f"overhead_us={step_overhead:.1f};"
         f"relative={wire_sps / local_sps:.2f}x"
+    )
+    return rows
+
+
+def gateway_binary() -> list[str]:
+    """The bp1 binary framed protocol vs the legacy JSON-lines protocol
+    vs in-process gateway calls (``--json BENCH_binary.json`` in CI).
+
+    Same windows, same server, three transports: ``binary.score.*``
+    holds one-shot scoring throughput for bp1 (raw-float32 frames,
+    pipelined 64 windows per frame), the JSON-lines fallback, and the
+    in-process gateway; ``vs_json`` is the headline protocol win and
+    ``relative`` (bp1 vs in-process) is the residual wire tax.
+    ``binary.pipeline.*`` sweeps frames-per-submit depth 1/8/64 on the
+    same bp1 connection — the depth-1 arm prices framing alone, the
+    deep arms price what request pipelining buys on top.
+    ``binary.stream.*`` compares per-timestep session stepping:
+    one-frame-per-step bp1 vs JSON vs the pipelined ``step_many`` path
+    (many timesteps per frame).
+    """
+    import numpy as np
+
+    from repro.engine import AnomalyService
+    from repro.gateway.client import GatewayClient
+    from repro.gateway.server import GatewayServer
+
+    arch, feats = "lstm-ae-f32-d2", 32
+    n_req, t_len, max_batch, n_steps = 64, 32, 16, 128
+    rng = np.random.default_rng(0)
+    windows = rng.standard_normal((n_req, t_len, feats)).astype(np.float32)
+    samples = rng.standard_normal((n_steps, feats)).astype(np.float32)
+    svc = AnomalyService(arch, schedule="wavefront")
+    rows = []
+
+    # in-process floor: the gateway API called directly, no socket
+    gw_local = svc.open_gateway(capacity=4, max_batch=max_batch,
+                                max_wait_ms=2.0)
+    gw_local.score(list(windows[:max_batch]))  # compile the bucket
+    t0 = time.perf_counter()
+    gw_local.score(list(windows))
+    local_rps = n_req / (time.perf_counter() - t0)
+
+    gw_wire = svc.open_gateway(capacity=4, max_batch=max_batch,
+                               max_wait_ms=2.0)
+    server = GatewayServer(gw_wire, port=0, pump_interval_ms=1.0)
+    host, port = server.start_in_thread()
+    try:
+        with GatewayClient(host, port, protocol="json") as client:
+            client.score_many(list(windows[:max_batch]))  # warm wire + pool
+            t0 = time.perf_counter()
+            client.score_many(list(windows))
+            json_rps = n_req / (time.perf_counter() - t0)
+            client.step(samples[0])
+            t0 = time.perf_counter()
+            for t in range(n_steps):
+                client.step(samples[t])
+            json_sps = n_steps / (time.perf_counter() - t0)
+            client.end_session()
+
+        with GatewayClient(host, port, protocol="binary") as client:
+            client.score_many(list(windows[:max_batch]))
+            depth_rps = {}
+            for depth in (1, 8, 64):
+                t0 = time.perf_counter()
+                client.score_many(list(windows), windows_per_frame=depth)
+                depth_rps[depth] = n_req / (time.perf_counter() - t0)
+            bp1_rps = depth_rps[64]
+            client.step(samples[0])
+            t0 = time.perf_counter()
+            for t in range(n_steps):
+                client.step(samples[t])
+            bp1_sps = n_steps / (time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            client.step_many(samples)
+            many_sps = n_steps / (time.perf_counter() - t0)
+            client.end_session()
+    finally:
+        server.stop_in_thread()
+
+    rows.append(
+        f"binary.score.{arch},{1e6 / bp1_rps:.1f},"
+        f"bp1_rps={bp1_rps:.0f};json_rps={json_rps:.0f};"
+        f"local_rps={local_rps:.0f};"
+        f"vs_json={bp1_rps / json_rps:.2f}x;"
+        f"relative={bp1_rps / local_rps:.2f}x"
+    )
+    rows.append(
+        f"binary.pipeline.{arch},{1e6 / depth_rps[64]:.1f},"
+        f"d1_rps={depth_rps[1]:.0f};d8_rps={depth_rps[8]:.0f};"
+        f"d64_rps={depth_rps[64]:.0f};"
+        f"d64_vs_d1={depth_rps[64] / depth_rps[1]:.2f}x"
+    )
+    rows.append(
+        f"binary.stream.{arch},{1e6 / bp1_sps:.1f},"
+        f"bp1_sps={bp1_sps:.0f};json_sps={json_sps:.0f};"
+        f"many_sps={many_sps:.0f};"
+        f"vs_json={bp1_sps / json_sps:.2f}x;"
+        f"many_vs_solo={many_sps / bp1_sps:.2f}x"
     )
     return rows
 
@@ -989,6 +1096,7 @@ _TABLES = {
     "engine_throughput": engine_throughput,
     "gateway_throughput": gateway_throughput,
     "gateway_transport": gateway_transport,
+    "gateway_binary": gateway_binary,
     "gateway_sharding": gateway_sharding,
     "gateway_workers": gateway_workers,
     "gateway_durability": gateway_durability,

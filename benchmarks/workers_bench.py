@@ -3,8 +3,9 @@ table's inner harness).
 
 Boots a :class:`repro.gateway.workers.WorkerFront` at ``--workers N``,
 drives it with ``--clients`` concurrent load-generator PROCESSES (the
-load they generate is pre-serialized JSON lines pumped over raw sockets,
-so client-side CPU never caps the measurement — the thing under test is
+load they generate is pre-serialized bp1 binary frames — preamble plus
+one pipelined SCORE frame per window — pumped over raw sockets, so
+client-side CPU never caps the measurement — the thing under test is
 the worker tier), and prints one machine-readable line::
 
     WORKERS n=2 score_rps=1234 clients=4 requests=768 wall_s=0.62 \
@@ -19,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import functools
-import json
 import multiprocessing as mp
 import os
 import sys
@@ -47,26 +47,41 @@ def drive(host: str, port: int, waves: int, wave_size: int, seed: int,
 
     import numpy as np
 
+    from repro.gateway import wire
+
     rng = np.random.default_rng(seed)
     windows = (rng.standard_normal((wave_size, T_LEN, FEATS)) * 0.1)
-    payload = b"".join(
-        json.dumps({"op": "score", "id": i,
-                    "series": w.astype(np.float32).tolist()}).encode() + b"\n"
+    # the whole wave as one pre-serialized byte string: negotiation
+    # preamble, then wave_size pipelined SCORE frames (raw float32, one
+    # window per frame) — the server answers them in submission order
+    payload = wire.PREAMBLE + b"".join(
+        wire.pack_frame(wire.OP_SCORE, i,
+                        meta={"n": 1, "t": T_LEN, "f": FEATS},
+                        data=np.ascontiguousarray(w, "<f4").tobytes())
         for i, w in enumerate(windows)
     )
+
+    def read_frame(rfile):
+        header = rfile.read(wire.HEADER_SIZE)
+        if len(header) < wire.HEADER_SIZE:
+            raise ConnectionError("server closed mid-wave")
+        _, flags, _, plen = wire.unpack_header(header)
+        body = rfile.read(plen) if plen else b""
+        if len(body) < plen:
+            raise ConnectionError("server closed mid-frame")
+        if flags & wire.FLAG_ERROR:
+            meta, _ = wire.split_payload(body)
+            raise RuntimeError(f"score failed: {meta}")
 
     def one_wave() -> None:
         sock = socket.create_connection((host, port), timeout=120)
         try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             rfile = sock.makefile("rb")
             sock.sendall(payload)
+            read_frame(rfile)  # the server's HELLO greeting
             for _ in range(wave_size):
-                line = rfile.readline()
-                if not line:
-                    raise ConnectionError("server closed mid-wave")
-                resp = json.loads(line)
-                if not resp.get("ok"):
-                    raise RuntimeError(f"score failed: {resp}")
+                read_frame(rfile)
         finally:
             sock.close()
 

@@ -1,4 +1,4 @@
-"""Client for the gateway's JSON-lines socket transport.
+"""Client for the gateway's socket transport.
 
 Drives a running ``python -m repro.launch.serve --arch <id> --http``
 server end to end: one streaming session (step-per-sample, final score
@@ -6,6 +6,13 @@ on close), a batch of concurrent one-shot score requests (coalesced by
 the server's micro-batcher and flushed by its background pump — no
 client-side pumping), and a live threshold recalibration that takes
 effect without the session being evicted.
+
+``--protocol`` picks the wire format: the default ``json`` keeps this
+example as the canonical legacy JSON-lines client (every exchange is
+byte-identical to the PR 3 protocol — which is exactly what the interop
+smoke asserts); ``binary`` requires the bp1 frame protocol and ``auto``
+negotiates.  The driving code is identical either way — the client API
+is protocol-agnostic.
 
 Run (two terminals):
 
@@ -34,16 +41,21 @@ def main():
     ap.add_argument("--requests", type=int, default=24,
                     help="concurrent one-shot score requests")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--protocol", choices=("json", "binary", "auto"),
+                    default="json",
+                    help="wire protocol: json (legacy lines, default), "
+                         "binary (require bp1 frames), auto (negotiate)")
     args = ap.parse_args()
     if args.timesteps < 1 or args.requests < 1:
         ap.error("--timesteps and --requests must be >= 1")
 
     rng = np.random.default_rng(args.seed)
-    with GatewayClient(args.host, args.port) as client:
+    with GatewayClient(args.host, args.port, protocol=args.protocol) as client:
         assert client.ping()
         stats = client.stats()
         feats = int(stats["features"])
-        print(f"connected: schedule={stats['schedule']} "
+        print(f"connected: protocol={client.protocol} "
+              f"schedule={stats['schedule']} "
               f"capacity={stats['capacity']} features={feats} "
               f"threshold={stats['threshold']}")
 

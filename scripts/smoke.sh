@@ -10,9 +10,13 @@
 #   6. the same transport on a sharded placement (--mesh data=2 over two
 #      forced host devices): pool slots + micro-batch rows shard 2-way
 #   7. the multi-worker front (--workers 2): two concurrent clients over
-#      one SO_REUSEPORT port, a live GET /metrics scrape of the
+#      one SO_REUSEPORT port — one legacy JSON-lines, one binary bp1
+#      (cross-protocol interop) — a live GET /metrics scrape of the
 #      front-aggregated Prometheus view, then SIGTERM -> every worker
 #      exits cleanly with zero dropped tickets
+#  10. the wire-protocol gates: byte-exact bp1 conformance corpus, the
+#      seeded codec fuzzer, and the live-server fuzzer (garbage frames
+#      must never wedge the server for well-formed clients)
 #   8. durable sessions: SIGKILL a worker mid-stream, resume on the
 #      respawned front with the signed token + client replay buffer —
 #      scores must be bit-equal to an uninterrupted oracle, and the
@@ -66,6 +70,14 @@ fi
 rm -f "$ANALYSIS_BAD"
 echo "analysis gate OK (clean tree passes, known-bad file fails)"
 
+# wire-protocol gates: golden-corpus conformance (byte-exact against the
+# live codec), then the seeded fuzzers — pure codec first, then a live
+# GatewayServer that must keep serving well-formed clients through the
+# garbage
+python scripts/wire_conformance.py
+python scripts/wire_fuzz.py --codec --iters 200
+python scripts/wire_fuzz.py --live --iters 30
+
 python examples/quickstart.py
 
 python -m repro.launch.serve --arch lstm-ae-f32-d2 \
@@ -105,9 +117,13 @@ grep -q "workers=2 mesh=1xdata" "$WORKERS_LOG" || {
 WPORT=$(sed -n 's/.*listening on [^:]*:\([0-9]*\).*/\1/p' "$WORKERS_LOG" | head -1)
 [ -n "$WPORT" ] || { echo "worker front never reported its port"; cat "$WORKERS_LOG"; exit 1; }
 
+# cross-protocol interop: one legacy JSON-lines client and one binary
+# bp1 client drive the same front concurrently; the drain line below
+# proves neither protocol dropped a ticket
 python examples/gateway_client.py --port "$WPORT" --timesteps 12 --requests 10 &
 WC1=$!
-python examples/gateway_client.py --port "$WPORT" --timesteps 12 --requests 10 --seed 1 &
+python examples/gateway_client.py --port "$WPORT" --timesteps 12 --requests 10 \
+  --seed 1 --protocol binary &
 WC2=$!
 wait "$WC1" && wait "$WC2" || { echo "worker-front client failed"; cat "$WORKERS_LOG"; exit 1; }
 

@@ -1,0 +1,248 @@
+"""Deterministic frame fuzzer for the bp1 binary transport.
+
+Two tiers, both seeded (``--seed``; same seed → same byte stream, so a
+CI failure reproduces locally with one command):
+
+``--codec``
+    Pure-codec tier, stdlib + :mod:`repro.gateway.wire` only (no
+    numpy/jax — runs in the CI ``lint`` job).  Feeds a
+    :class:`~repro.gateway.wire.FrameReader` mutated garbage — truncated
+    headers, oversize length fields, bad magic/version, corrupted meta —
+    in adversarial chunk sizes and asserts the codec either parses or
+    raises :class:`~repro.gateway.wire.WireProtocolError`; anything else
+    (wrong exception, hang, giant allocation) is a bug.  Interleaved
+    valid frames must still round-trip byte-exactly after every
+    poisoning, using a fresh reader (a framing error is connection-fatal
+    by design).
+
+``--live``
+    Boots a real :class:`~repro.gateway.server.GatewayServer` over a
+    tiny model and throws the same garbage at the socket — before the
+    preamble (JSON-lines path), after it (binary path), and mid-stream.
+    After every attack the invariant is: a *fresh, well-formed*
+    connection still gets correct answers (ping + score + step).  A
+    malformed peer may lose its own connection; it must never wedge the
+    server.
+
+Usage (CI runs both)::
+
+    PYTHONPATH=src python scripts/wire_fuzz.py --codec --iters 400
+    PYTHONPATH=src python scripts/wire_fuzz.py --live  --iters 60
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import socket
+import struct
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def _load_wire():
+    """Import the codec without the full gateway package (whose
+    ``__init__`` needs numpy): the --codec tier runs in the CI lint job
+    on a bare interpreter, so fall back to loading wire.py by path."""
+    try:
+        from repro.gateway import wire
+        return wire
+    except ImportError:
+        import importlib.util
+
+        path = (Path(__file__).resolve().parent.parent
+                / "src" / "repro" / "gateway" / "wire.py")
+        spec = importlib.util.spec_from_file_location("repro_gateway_wire", path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+
+
+wire = _load_wire()
+
+MAX_FRAME = 1 << 20  # small cap so an alloc bug would be loud, not slow
+
+
+def _valid_frame(rng: random.Random) -> bytes:
+    """One well-formed frame with randomized opcode/meta/data."""
+    opcode = rng.choice(list(wire.NAME_BY_OPCODE))
+    rid = rng.randrange(0, 1 << 32)
+    meta = None
+    if rng.random() < 0.7:
+        meta = {"n": rng.randrange(0, 8), "t": rng.randrange(1, 32),
+                "tag": "x" * rng.randrange(0, 16)}
+    data = bytes(rng.randrange(256) for _ in range(rng.randrange(0, 256)))
+    return wire.pack_frame(opcode, rid, meta=meta, data=data)
+
+
+def _mutate(rng: random.Random, blob: bytes) -> bytes:
+    """One adversarial transformation of a valid frame."""
+    kind = rng.randrange(8)
+    b = bytearray(blob)
+    if kind == 0:                      # truncated header
+        return bytes(b[: rng.randrange(0, wire.HEADER_SIZE)])
+    if kind == 1:                      # truncated payload
+        return bytes(b[: wire.HEADER_SIZE + rng.randrange(0, max(1, len(b) - wire.HEADER_SIZE))])
+    if kind == 2:                      # bad magic
+        b[0] = rng.randrange(256) ^ b[0] | 1
+        b[1] ^= 0xFF
+        return bytes(b)
+    if kind == 3:                      # bad version
+        b[2] = rng.choice([0, 2, 0x7F, 0xFF])
+        return bytes(b)
+    if kind == 4:                      # oversize length field (alloc bomb)
+        struct.pack_into("<I", b, 16, rng.choice([MAX_FRAME + 1, 0x7FFFFFFF, 0xFFFFFFFF]))
+        return bytes(b)
+    if kind == 5:                      # meta_len beyond payload
+        if len(b) > wire.HEADER_SIZE + 4:
+            struct.pack_into("<I", b, wire.HEADER_SIZE, 0xFFFFFF)
+        return bytes(b)
+    if kind == 6:                      # corrupt meta JSON bytes
+        if len(b) > wire.HEADER_SIZE + 8:
+            b[wire.HEADER_SIZE + 4] ^= 0xFF
+        return bytes(b)
+    return bytes(rng.randrange(256) for _ in range(rng.randrange(1, 64)))  # pure noise
+
+
+def _feed_chunked(rng: random.Random, reader, blob: bytes) -> list:
+    """Feed ``blob`` in random-sized chunks, collecting parsed frames."""
+    frames = []
+    i = 0
+    while i < len(blob):
+        k = rng.randrange(1, 40)
+        frames.extend(reader.feed(blob[i:i + k]))
+        i += k
+    return frames
+
+
+def fuzz_codec(seed: int, iters: int) -> int:
+    rng = random.Random(seed)
+    parsed = rejected = 0
+    for i in range(iters):
+        valid = _valid_frame(rng)
+        evil = _mutate(rng, valid)
+        reader = wire.FrameReader(max_frame_bytes=MAX_FRAME)
+        try:
+            _feed_chunked(rng, reader, evil)
+            # stuck partial frames are fine; silent giant buffering is not
+            assert reader.pending_bytes <= MAX_FRAME + wire.HEADER_SIZE, (
+                f"iter {i}: reader buffered {reader.pending_bytes} bytes"
+            )
+            parsed += 1
+        except wire.WireProtocolError:
+            rejected += 1
+        # the codec must stay correct after poisoning: a FRESH reader
+        # (framing errors are connection-fatal) round-trips valid frames
+        clean = wire.FrameReader(max_frame_bytes=MAX_FRAME)
+        got = _feed_chunked(rng, clean, valid + valid)
+        assert len(got) == 2, f"iter {i}: {len(got)} frames from 2 valid"
+        for f in got:
+            assert wire.pack_frame(f.opcode, f.req_id, flags=f.flags) \
+                .startswith(wire.pack_header(f.opcode, f.flags, f.req_id, 0)[:16]), \
+                f"iter {i}: header fields did not survive round-trip"
+            meta, data = wire.split_payload(f.payload)
+            re_packed = wire.pack_frame(f.opcode, f.req_id,
+                                        meta=meta or None,
+                                        data=bytes(data), flags=f.flags)
+            header = wire.pack_header(f.opcode, f.flags, f.req_id,
+                                      len(f.payload))
+            assert re_packed == header + bytes(f.payload), \
+                f"iter {i}: payload not byte-stable"
+    print(f"wire-fuzz codec: {iters} iterations "
+          f"({rejected} rejected, {parsed} tolerated), seed={seed}")
+    return 0
+
+
+# -- live tier -------------------------------------------------------------
+
+
+def _attack_bytes(rng: random.Random) -> bytes:
+    """Garbage to throw at a live socket."""
+    choice = rng.randrange(6)
+    if choice == 0:      # binary preamble then mutated frame
+        return wire.PREAMBLE + _mutate(rng, _valid_frame(rng))
+    if choice == 1:      # preamble then truncated header, then hang up
+        return wire.PREAMBLE + wire.pack_header(wire.OP_PING, 0, 1, 0)[
+            : rng.randrange(1, wire.HEADER_SIZE)]
+    if choice == 2:      # preamble then oversize length field
+        return wire.PREAMBLE + wire.pack_header(wire.OP_SCORE, 0, 2, 0xFFFFFFF0)
+    if choice == 3:      # raw garbage straight at the JSON-lines reader
+        return bytes(rng.randrange(256) for _ in range(rng.randrange(1, 128))) + b"\n"
+    if choice == 4:      # bad magic where the preamble would go
+        return b"\xb2Q1\n" + _valid_frame(rng)
+    return wire.PREAMBLE + wire.PREAMBLE + _valid_frame(rng)  # double preamble
+
+
+def fuzz_live(seed: int, iters: int) -> int:
+    # heavyweight imports gated here so --codec stays stdlib-fast
+    from repro.engine import AnomalyService
+    from repro.gateway.client import GatewayClient
+    from repro.gateway.server import GatewayServer
+
+    import numpy as np
+
+    rng = random.Random(seed)
+    svc = AnomalyService("lstm-ae-f32-d2", schedule="wavefront")
+    gw = svc.open_gateway(capacity=4, max_batch=4, max_wait_ms=5.0)
+    server = GatewayServer(gw, port=0, pump_interval_ms=2.0)
+    host, port = server.start_in_thread()
+    feats = gw.pool.features
+    window = np.linspace(0.0, 1.0, 8 * feats, dtype=np.float32).reshape(8, feats)
+    try:
+        # oracle once, before any attack
+        with GatewayClient(host, port, protocol="binary") as c:
+            oracle_score = c.score(window)
+        for i in range(iters):
+            attack = _attack_bytes(rng)
+            with socket.create_connection((host, port), timeout=10) as s:
+                s.settimeout(10)
+                try:
+                    s.sendall(attack)
+                    # half of the time, linger to read whatever the
+                    # server answers (error frame / JSON error line)
+                    if rng.random() < 0.5:
+                        s.recv(4096)
+                except OSError:
+                    pass  # server hanging up on us is a legal response
+            if i % 10 == 9:
+                # the invariant: fresh well-formed connections still work
+                proto = "binary" if rng.random() < 0.5 else "json"
+                with GatewayClient(host, port, protocol=proto) as c:
+                    assert c.request("ping")["ok"], f"iter {i}: ping failed"
+                    score = c.score(window)
+                    assert score == oracle_score, (
+                        f"iter {i}: score drifted after fuzzing "
+                        f"({score} != {oracle_score})"
+                    )
+                    c.step(window[0])
+        # final end-to-end check on both protocols
+        for proto in ("binary", "json"):
+            with GatewayClient(host, port, protocol=proto) as c:
+                assert c.score(window) == oracle_score
+    finally:
+        server.stop_in_thread()
+    print(f"wire-fuzz live: survived {iters} attacks, "
+          f"scores bit-stable on both protocols, seed={seed}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--codec", action="store_true", help="codec tier (stdlib-only)")
+    ap.add_argument("--live", action="store_true", help="live-server tier")
+    ap.add_argument("--seed", type=int, default=1302, help="PRNG seed")
+    ap.add_argument("--iters", type=int, default=200, help="iterations")
+    args = ap.parse_args(argv)
+    if not (args.codec or args.live):
+        ap.error("pick a tier: --codec and/or --live")
+    rc = 0
+    if args.codec:
+        rc |= fuzz_codec(args.seed, args.iters)
+    if args.live:
+        rc |= fuzz_live(args.seed, max(10, args.iters))
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

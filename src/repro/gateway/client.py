@@ -1,16 +1,31 @@
-"""Synchronous JSON-lines client for :class:`~repro.gateway.server.GatewayServer`.
+"""Synchronous client for :class:`~repro.gateway.server.GatewayServer`.
 
-Stdlib-socket counterpart of the wire protocol documented in
-``server.py`` — used by the client example, the transport tests, the
-smoke script and the ``gateway_transport`` benchmark.  One connection
-carries at most one streaming session (the server maps connections to
-pool sessions) plus any number of in-flight one-shot score requests.
+Stdlib-socket counterpart of the wire protocols documented in
+``server.py`` and :mod:`repro.gateway.wire` — used by the client
+example, the transport tests, the smoke script and the transport
+benchmarks.  One connection carries at most one streaming session (the
+server maps connections to pool sessions) plus any number of in-flight
+one-shot score requests.
+
+Protocol negotiation — ``protocol="auto"`` (the default) opens the
+connection with the 4-byte bp1 preamble: a bp1-capable server answers a
+binary ``HELLO`` frame and the connection runs the binary protocol
+(:attr:`protocol` becomes ``"bp1"``); a legacy JSON-lines server answers
+a JSON error line instead, which the client consumes and silently falls
+back to JSON on the same connection.  ``protocol="json"`` skips the
+preamble entirely — the connection is byte-for-byte the PR 3 client —
+and ``protocol="binary"`` raises if the server can't negotiate bp1.
+Either way every public method below behaves identically; on bp1 the
+hot ops (``submit``/``score``/``step``) travel as raw-float32 frames
+(no float lists) and :meth:`score_many`/:meth:`step_many` additionally
+pipeline many windows per frame.
 
 Responses can arrive out of submission order (``score`` answers when the
 server's micro-batcher flushes), so the client matches responses to
 requests by ``id``: :meth:`submit` returns a request id immediately and
 :meth:`collect` blocks until that id's response has been read, parking
-any other responses it sees on the way.
+any other responses it sees on the way.  On bp1 the id travels in the
+frame header; pipelined frames complete out of order the same way.
 
 Durability (server-side ``enable_durability``): ``step`` responses then
 carry ``seq`` + a signed resumption ``token``, which the client tracks
@@ -30,6 +45,8 @@ from collections import OrderedDict
 from typing import Optional, Sequence
 
 import numpy as np
+
+from repro.gateway import wire
 
 
 class ReplayWindowExceededError(RuntimeError):
@@ -60,8 +77,17 @@ class GatewayClient:
     """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
-                 timeout: float = 30.0, replay_window: int = 256):
+                 timeout: float = 30.0, replay_window: int = 256,
+                 protocol: str = "auto"):
+        if protocol not in ("auto", "binary", "json"):
+            raise ValueError(
+                f"protocol must be 'auto', 'binary' or 'json', got {protocol!r}"
+            )
         self._sock = socket.create_connection((host, port), timeout=timeout)
+        # request/response protocol: never let Nagle hold a small frame
+        # back waiting for the previous one's ACK (the asyncio server side
+        # already sets this on its transports)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self._rfile = self._sock.makefile("rb")
         self._next_id = 0
         self._parked: dict = {}  # id -> response that arrived out of order
@@ -72,8 +98,44 @@ class GatewayClient:
         self._token: Optional[str] = None
         self._seq = 0
         self._replay: "OrderedDict[int, list]" = OrderedDict()
+        #: Active wire protocol after negotiation: "bp1" or "json".
+        self.protocol = "json"
+        #: The server's HELLO meta when bp1 negotiated (version, limits).
+        self.server_info: dict = {}
+        if protocol != "json":
+            self._negotiate(require=(protocol == "binary"))
 
     # -- wire --------------------------------------------------------------
+
+    def _negotiate(self, require: bool) -> None:
+        """Send the bp1 preamble and read the server's verdict: the first
+        response byte is either the frame magic (bp1 negotiated — consume
+        the HELLO frame) or ``{`` (a legacy server's JSON error line for
+        the undecodable preamble — consume it and fall back to JSON)."""
+        self._sock.sendall(wire.PREAMBLE)
+        head = self._rfile.read(1)
+        if not head:
+            raise ConnectionError("server closed the connection while negotiating")
+        if head == wire.MAGIC[:1]:
+            opcode, flags, _rid, length = wire.unpack_header(
+                head + self._read_exact(wire.HEADER_SIZE - 1)
+            )
+            meta, _ = wire.split_payload(self._read_exact(length))
+            if opcode != wire.OP_HELLO or meta.get("version") != wire.VERSION:
+                raise GatewayClientError(
+                    "ProtocolError",
+                    f"unexpected bp1 greeting: opcode 0x{opcode:02x}, meta {meta}",
+                )
+            self.protocol = "bp1"
+            self.server_info = meta
+            return
+        line = head + self._rfile.readline()
+        if require:
+            raise GatewayClientError(
+                "ProtocolError",
+                f"server does not speak bp1 (answered {line[:80]!r})",
+            )
+        self.protocol = "json"
 
     def _send(self, payload: dict) -> int:
         rid = self._next_id
@@ -82,8 +144,64 @@ class GatewayClient:
         self._sock.sendall((json.dumps(payload) + "\n").encode())
         return rid
 
+    def _send_frame(self, opcode: int, meta: Optional[dict] = None,
+                    data: bytes = b"") -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._sock.sendall(wire.pack_frame(opcode, rid, meta=meta, data=data))
+        return rid
+
+    def _read_exact(self, n: int) -> bytes:
+        buf = self._rfile.read(n) if n else b""
+        if len(buf) < n:
+            raise ConnectionError("server closed the connection")
+        return buf
+
+    def _read_frame(self) -> dict:
+        """Read one frame and normalize it into the same dict shape the
+        JSON protocol produces, so everything above :meth:`collect` is
+        protocol-agnostic: header req_id -> ``id``, meta -> fields, raw
+        float32 data -> ``scores`` (score) / ``running_errors`` (step),
+        plus the scalar ``score``/``alert`` aliases for single-window
+        frames."""
+        opcode, flags, rid, length = wire.unpack_header(
+            self._read_exact(wire.HEADER_SIZE)
+        )
+        meta, data = wire.split_payload(self._read_exact(length))
+        decoded = dict(meta)
+        decoded["id"] = rid
+        if flags & wire.FLAG_ERROR:
+            decoded.setdefault("ok", False)
+        else:
+            decoded.setdefault("ok", True)
+            decoded.setdefault("op", wire.NAME_BY_OPCODE.get(opcode))
+            values = (np.frombuffer(data, "<f4").tolist() if len(data) else [])
+            if opcode == wire.OP_SCORE:
+                decoded["scores"] = values
+                if len(values) == 1:
+                    decoded["score"] = values[0]
+                    if isinstance(decoded.get("alert"), list):
+                        decoded["alert"] = decoded["alert"][0]
+            elif opcode == wire.OP_STEP:
+                decoded["running_errors"] = values
+                if len(values) == 1 and isinstance(decoded.get("alert"), list):
+                    decoded["alert"] = decoded["alert"][0]
+        return decoded
+
     def _read_until(self, rid: int) -> dict:
         while rid not in self._parked:
+            if self.protocol == "bp1":
+                decoded = self._read_frame()
+                got = decoded["id"]
+                if got == wire.NO_REQUEST_ID and not decoded.get("ok"):
+                    # connection-level failure (framing loss): the server
+                    # answers on the sentinel id and hangs up
+                    raise GatewayClientError(
+                        decoded.get("error", "UnknownError"),
+                        decoded.get("message", ""),
+                    )
+                self._parked[got] = decoded
+                continue
             line = self._rfile.readline()
             if not line:
                 raise ConnectionError("server closed the connection")
@@ -109,7 +227,15 @@ class GatewayClient:
         return resp
 
     def request(self, op: str, **fields) -> dict:
-        """Send one request and wait for its response."""
+        """Send one request and wait for its response.  On bp1 the same
+        dict travels as a generic meta frame (unknown ``op`` names get an
+        unassigned opcode so the server still answers the error — JSON
+        parity); ``score``/``step`` tunnel their float lists in meta,
+        which works but skips the raw-float32 fast path — prefer
+        :meth:`submit`/:meth:`step`."""
+        if self.protocol == "bp1":
+            opcode = wire.OPCODE_BY_NAME.get(op, 0x7F)
+            return self.collect(self._send_frame(opcode, meta=fields or None))
         return self.collect(self._send({"op": op, **fields}))
 
     # -- streaming session -------------------------------------------------
@@ -144,8 +270,42 @@ class GatewayClient:
         """Advance this connection's pool session one timestep; returns the
         response (``running_error`` and, when calibrated, ``alert``; with
         durability also ``seq`` + ``token``, tracked on the client)."""
+        if self.protocol == "bp1":
+            arr = np.ascontiguousarray(x_t, dtype="<f4")
+            rid = self._send_frame(wire.OP_STEP, meta={"t": 1},
+                                   data=arr.tobytes())
+            return self._track(self.collect(rid), arr.tolist())
         x = np.asarray(x_t, np.float32).tolist()
         return self._track(self.request("step", x=x), x)
+
+    def step_many(self, xs) -> list:
+        """Advance the session ``len(xs)`` timesteps; returns every
+        intermediate running error.  On bp1 all samples travel in ONE
+        frame (one round-trip instead of ``len(xs)``); on JSON this
+        degrades to a per-sample loop with identical results.  Durable
+        sessions track the frame's token/seq against each sample's
+        implied position, so :meth:`resume` replay stays exact."""
+        if self.protocol != "bp1":
+            return [float(self.step(x)["running_error"]) for x in xs]
+        arr = np.ascontiguousarray(xs, dtype="<f4")
+        if arr.ndim != 2:
+            raise ValueError(f"expected (k, F) samples, got shape {arr.shape}")
+        k = arr.shape[0]
+        if k == 0:
+            return []
+        rid = self._send_frame(wire.OP_STEP, meta={"t": k}, data=arr.tobytes())
+        decoded = self.collect(rid)
+        errors = decoded.get("running_errors") or []
+        if "token" in decoded:
+            # the frame's seq/token cover its LAST sample; samples i of k
+            # sit at seq (last - k + 1 + i) in the replay buffer
+            self._token = decoded["token"]
+            last = self._seq = int(decoded.get("seq", self._seq))
+            for i in range(k):
+                self._replay[last - k + 1 + i] = arr[i].tolist()
+            while len(self._replay) > self.replay_window:
+                self._replay.popitem(last=False)
+        return [float(e) for e in errors]
 
     def end_session(self) -> dict:
         """Evict the session; returns the response (``final`` score).  On
@@ -204,7 +364,18 @@ class GatewayClient:
         :meth:`collect` (responses arrive on the server's flush cadence).
         ``priority`` (0 = highest class) and ``tenant`` feed the server's
         admission controller when one is attached; both are omitted from
-        the wire payload when None, so legacy traffic is byte-identical."""
+        the wire payload when None, so legacy traffic is byte-identical.
+        On bp1 the window travels as one raw-float32 SCORE frame."""
+        if self.protocol == "bp1":
+            arr = np.ascontiguousarray(series, dtype="<f4")
+            if arr.ndim != 2:
+                raise ValueError(f"expected (T, F) window, got shape {arr.shape}")
+            meta = {"n": 1, "t": int(arr.shape[0]), "f": int(arr.shape[1])}
+            if priority is not None:
+                meta["priority"] = int(priority)
+            if tenant is not None:
+                meta["tenant"] = str(tenant)
+            return self._send_frame(wire.OP_SCORE, meta=meta, data=arr.tobytes())
         payload = {"op": "score",
                    "series": np.asarray(series, np.float32).tolist()}
         if priority is not None:
@@ -239,12 +410,21 @@ class GatewayClient:
         rid = self._next_id
         self._next_id += 1
         tid = f"c{rid:x}"
-        body = json.dumps({
-            "op": "score", "id": rid, "trace": tid,
-            "series": np.asarray(series, np.float32).tolist(),
-        })
+        if self.protocol == "bp1":
+            arr = np.ascontiguousarray(series, dtype="<f4")
+            buf = wire.pack_frame(
+                wire.OP_SCORE, rid,
+                meta={"n": 1, "t": int(arr.shape[0]), "f": int(arr.shape[1]),
+                      "trace": tid},
+                data=arr.tobytes(),
+            )
+        else:
+            buf = (json.dumps({
+                "op": "score", "id": rid, "trace": tid,
+                "series": np.asarray(series, np.float32).tolist(),
+            }) + "\n").encode()
         t_serialized = time.perf_counter()
-        self._sock.sendall((body + "\n").encode())
+        self._sock.sendall(buf)
         resp = self.collect(rid)
         e2e_ms = (time.perf_counter() - t0) * 1e3
         trace = resp.get("trace") or {}
@@ -264,11 +444,60 @@ class GatewayClient:
             "alert": resp.get("alert"),
         }
 
-    def score_many(self, windows: Sequence) -> list:
+    def score_many(self, windows: Sequence, *,
+                   windows_per_frame: int = 64) -> list:
         """Submit every window up front (so the server can micro-batch
-        them), then collect all scores in submission order."""
-        rids = [self.submit(w) for w in windows]
-        return [float(self.collect(rid)["score"]) for rid in rids]
+        them), then collect all scores in submission order.
+
+        On bp1 this is the pipelined fast path: consecutive same-shape
+        windows are packed ``windows_per_frame`` at a time into single
+        SCORE frames (one header + one contiguous float32 block for the
+        whole group), all frames are written before any response is
+        read, and responses are matched by frame id — so the depth-1
+        sweep of the ``gateway_binary`` benchmark is literally
+        ``windows_per_frame=1``.  On JSON this degrades to the PR 3
+        submit/collect loop with identical results."""
+        if self.protocol != "bp1":
+            rids = [self.submit(w) for w in windows]
+            return [float(self.collect(rid)["score"]) for rid in rids]
+        depth = int(windows_per_frame)
+        if depth < 1:
+            raise ValueError(f"windows_per_frame must be >= 1, got {depth}")
+        arrs = [np.ascontiguousarray(w, dtype="<f4") for w in windows]
+        for arr in arrs:
+            if arr.ndim != 2:
+                raise ValueError(
+                    f"expected (T, F) windows, got shape {arr.shape}"
+                )
+        frames = []  # (rid, window count) in submission order
+        i = 0
+        while i < len(arrs):
+            j = i + 1
+            while (j < len(arrs) and j - i < depth
+                   and arrs[j].shape == arrs[i].shape):
+                j += 1
+            chunk = arrs[i:j]
+            t, f = chunk[0].shape
+            data = (np.stack(chunk).tobytes() if len(chunk) > 1
+                    else chunk[0].tobytes())
+            rid = self._send_frame(
+                wire.OP_SCORE,
+                meta={"n": len(chunk), "t": int(t), "f": int(f)},
+                data=data,
+            )
+            frames.append((rid, len(chunk)))
+            i = j
+        scores: list = []
+        for rid, count in frames:
+            decoded = self.collect(rid)
+            got = decoded.get("scores") or []
+            if len(got) != count:
+                raise GatewayClientError(
+                    "ProtocolError",
+                    f"frame {rid} answered {len(got)} scores for {count} windows",
+                )
+            scores.extend(float(s) for s in got)
+        return scores
 
     # -- control -----------------------------------------------------------
 

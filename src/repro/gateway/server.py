@@ -83,6 +83,27 @@ Failures answer ``{"ok": false, "op": .., "error": "<ExceptionName>",
 oversized windows, and whatever the engine raised for tickets failed
 mid-flush (future-style error completion, the queue keeps serving).
 
+Binary transport (bp1) — the JSON-lines protocol above stays the
+negotiated fallback, but the hot path is the length-prefixed binary
+frame format of :mod:`repro.gateway.wire`.  A client that opens the
+connection with the 4-byte ``bp1`` preamble switches the connection to
+frame mode: the server answers a ``HELLO`` response frame and from then
+on reads fixed 20-byte headers + raw payloads (``readexactly``, no line
+scanning).  ``SCORE``/``STEP`` frames carry float32 payloads that land
+in the micro-batcher via ``np.frombuffer`` views — no float lists — and
+one ``SCORE`` frame may carry *n* same-shape windows (pipelined batched
+submit; the response frame returns *n* float32 scores when the last
+ticket completes).  Every other opcode is a generic meta frame whose
+JSON ``meta`` is exactly the dict the JSON protocol would carry, so the
+``_op_*`` handlers below serve both protocols unchanged (drain
+semantics, resumption tokens, priority/tenant admission included).
+Per-protocol traffic is visible in telemetry as ``wire.req_json`` /
+``wire.req_bp1`` counters (and ``wire.conn_*`` per connection); the
+``wire_ms`` stage histogram covers both dispatch paths.  Constructing
+the server with ``enable_binary=False`` ignores the preamble and
+behaves byte-for-byte like the PR 3 JSON-lines server (that is also
+what proves client fallback in tests).
+
 Concurrency model: everything touching the gateway (handlers + pump)
 runs on ONE event loop, preserving the gateway's single-threaded
 contract; JAX calls block the loop for one step/flush at a time, which
@@ -101,9 +122,13 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.gateway import AnomalyGateway
+from repro.gateway import AnomalyGateway, wire
 
 logger = logging.getLogger(__name__)
+
+#: What the server's readline loop sees when a binary client opens with
+#: ``wire.PREAMBLE`` (readline keeps the ``\n``; dispatch strips it).
+_PREAMBLE_LINE = wire.PREAMBLE.rstrip(b"\n")
 
 
 def _error_payload(op: str, exc: BaseException) -> dict:
@@ -140,6 +165,7 @@ class GatewayServer:
         reuse_port: bool = False,
         stats_provider: Optional[Callable] = None,
         recalibrate_provider: Optional[Callable] = None,
+        enable_binary: bool = True,
     ):
         if not isinstance(gateway, AnomalyGateway):
             raise TypeError(f"expected AnomalyGateway, got {type(gateway)!r}")
@@ -158,6 +184,10 @@ class GatewayServer:
         # ~20 bytes/float; the gateway's own admission limits do the real
         # policing, this just keeps asyncio from resetting the connection
         self.max_line_bytes = max_line_bytes
+        # enable_binary=False replays the PR 3 JSON-lines-only behaviour
+        # (the bp1 preamble is then just an undecodable line) — used by
+        # tests to prove client auto-negotiation falls back cleanly
+        self.enable_binary = enable_binary
         if pump_interval_ms is None:
             pump_interval_ms = max(0.5, gateway.batcher.max_wait_ms / 2.0)
         self.pump_interval_s = pump_interval_ms / 1e3
@@ -350,6 +380,11 @@ class GatewayServer:
                 line = line.strip()
                 if not line:
                     continue
+                if self.enable_binary and line == _PREAMBLE_LINE:
+                    # negotiation: the peer speaks bp1 — switch this
+                    # connection to frame mode for the rest of its life
+                    await self._serve_binary(reader, writer, conn)
+                    break
                 conn.dispatch(line)
                 await writer.drain()
         except (ConnectionResetError, BrokenPipeError, asyncio.IncompleteReadError):
@@ -364,6 +399,105 @@ class GatewayServer:
                 pass
             self._handlers.discard(task)
 
+    async def _serve_binary(self, reader, writer, conn: "_Connection") -> None:
+        """Frame loop for a connection that sent the bp1 preamble.
+
+        Greets with a HELLO response frame (the client's confirmation
+        that negotiation succeeded), then reads frames with
+        ``readexactly``.  A framing-level violation (bad magic/version,
+        oversize length field) means byte alignment is lost: best-effort
+        error notice, then hang up.  Payload-level problems are answered
+        per-frame inside ``dispatch_frame`` and keep the connection.
+        """
+        conn.binary = True
+        self.gateway.telemetry.count("wire.conn_bp1")
+        conn.send_frame(
+            wire.OP_HELLO,
+            wire.NO_REQUEST_ID,
+            meta={
+                "ok": True,
+                "op": "hello",
+                "protocol": "bp1",
+                "version": wire.VERSION,
+                "max_frame_bytes": self.max_line_bytes,
+                "features": self.gateway.pool.features,
+            },
+        )
+        await writer.drain()
+        while not self._draining:
+            try:
+                frame = await wire.read_frame(reader, self.max_line_bytes)
+            except asyncio.IncompleteReadError:
+                return  # peer hung up (possibly mid-frame); _handle tears down
+            except wire.WireProtocolError as exc:
+                conn.send_frame(
+                    0, wire.NO_REQUEST_ID, meta=_error_payload("?", exc),
+                    flags=wire.FLAG_RESPONSE | wire.FLAG_ERROR,
+                )
+                return
+            conn.dispatch_frame(frame)
+            await writer.drain()
+
+
+class _FrameScores:
+    """Collects the *n* tickets of one pipelined SCORE frame and answers
+    the frame — one response, ``n`` float32 scores — when the last ticket
+    completes.  Tickets complete independently (a size-trigger flush can
+    fire DURING the submit loop), so completion is counted, not awaited.
+    If any submit raises mid-frame the whole frame answers one error via
+    the dispatch error path and the collector is cancelled so callbacks
+    from already-submitted tickets stay silent."""
+
+    __slots__ = ("conn", "rid", "n", "span", "scores", "pending", "error",
+                 "dead", "stage_ms")
+
+    def __init__(self, conn: "_Connection", rid: int, n: int, span=None):
+        self.conn = conn
+        self.rid = rid
+        self.n = n
+        self.span = span
+        self.scores = np.zeros(n, np.float32)
+        self.pending = n
+        self.error: Optional[BaseException] = None
+        self.dead = False
+        self.stage_ms = None
+
+    def bind(self, i: int):
+        def _completed(ticket) -> None:
+            self.done(i, ticket)
+
+        return _completed
+
+    def done(self, i: int, ticket) -> None:
+        if ticket.failed:
+            if self.error is None:
+                self.error = ticket.exception()
+        else:
+            self.scores[i] = ticket.score
+            self.stage_ms = ticket.stage_ms
+        self.pending -= 1
+        if self.pending == 0 and not self.dead:
+            self.finish()
+
+    def cancel(self) -> None:
+        self.dead = True
+
+    def finish(self) -> None:
+        if self.error is not None:
+            self.conn.send(_error_payload("score", self.error), self.rid)
+            return
+        meta = {"ok": True, "op": "score", "n": self.n}
+        threshold = self.conn.gateway.threshold
+        if threshold is not None:
+            meta["alert"] = [bool(s > threshold) for s in self.scores.tolist()]
+        if self.span is not None:
+            for stage, ms in (self.stage_ms or {}).items():
+                self.span.stage(stage, ms)
+            meta["trace"] = self.conn.gateway.tracer.finish(self.span).to_wire()
+        self.conn.send_frame(
+            wire.OP_SCORE, self.rid, meta=meta, data=self.scores.tobytes()
+        )
+
 
 class _Connection:
     """Per-connection protocol state: at most one pool session (the
@@ -377,6 +511,8 @@ class _Connection:
         self.writer = writer
         self.session_seq = 0
         self.stream_id = None  # ("conn", id, generation) when resident
+        self.binary = False  # flipped when the bp1 preamble negotiates
+        self._counted = False  # wire.conn_* counter emitted once per conn
         # strong refs to in-flight control tasks: the loop only keeps
         # weak ones, so an unreferenced task can be GC-cancelled mid-op
         self._control_tasks: set = set()
@@ -384,6 +520,18 @@ class _Connection:
     # -- transport out -----------------------------------------------------
 
     def send(self, payload: dict, rid=None) -> None:
+        """Protocol-aware response write: a JSON line, or — after bp1
+        negotiation — the same dict as a response frame's meta (which is
+        what lets every ``_op_*`` handler serve both protocols)."""
+        if self.binary:
+            opcode = wire.OPCODE_BY_NAME.get(payload.get("op"), 0)
+            flags = wire.FLAG_RESPONSE
+            if not payload.get("ok", True):
+                flags |= wire.FLAG_ERROR
+            if not isinstance(rid, int) or not 0 <= rid <= wire.NO_REQUEST_ID:
+                rid = wire.NO_REQUEST_ID
+            self.send_frame(opcode, rid, meta=payload, flags=flags)
+            return
         if rid is not None:
             payload["id"] = rid
         if self.writer.is_closing():
@@ -393,6 +541,19 @@ class _Connection:
         except Exception:
             logger.exception("conn %d: response write failed", self.conn_id)
 
+    def send_frame(
+        self, opcode: int, rid: int, meta: Optional[dict] = None,
+        data: bytes = b"", flags: int = wire.FLAG_RESPONSE,
+    ) -> None:
+        if self.writer.is_closing():
+            return
+        try:
+            self.writer.write(
+                wire.pack_frame(opcode, rid, meta=meta, data=data, flags=flags)
+            )
+        except Exception:
+            logger.exception("conn %d: frame write failed", self.conn_id)
+
     # -- dispatch ----------------------------------------------------------
 
     def dispatch(self, line: bytes) -> None:
@@ -401,6 +562,10 @@ class _Connection:
         # time) — the ``wire_ms`` stage histogram when detail is on
         tel = self.gateway.telemetry
         t_in = tel.now() if tel.detail else 0.0
+        tel.count("wire.req_json")
+        if not self._counted:
+            self._counted = True
+            tel.count("wire.conn_json")
         try:
             req = json.loads(line)
             op = req.get("op")
@@ -420,6 +585,146 @@ class _Connection:
             self.send(_error_payload(op, exc), rid)  # never drops the conn
         if tel.detail:
             tel.observe_stage("wire_ms", (tel.now() - t_in) * 1e3)
+
+    def dispatch_frame(self, frame: wire.Frame) -> None:
+        """Binary-mode request dispatch.  SCORE/STEP get dedicated
+        raw-float32 handlers; every other opcode rebuilds the JSON-era
+        request dict from the frame's meta and reuses ``_op_*``."""
+        tel = self.gateway.telemetry
+        t_in = tel.now() if tel.detail else 0.0
+        tel.count("wire.req_bp1")
+        rid = frame.req_id
+        op = wire.NAME_BY_OPCODE.get(frame.opcode)
+        if op is None or frame.opcode == wire.OP_HELLO:
+            # hello is the server's greeting, never a request op
+            exc = ValueError(f"unknown opcode 0x{frame.opcode:02x}")
+            self.send_frame(
+                frame.opcode, rid, meta=_error_payload("?", exc),
+                flags=wire.FLAG_RESPONSE | wire.FLAG_ERROR,
+            )
+            return
+        try:
+            meta, data = wire.split_payload(frame.payload)
+        except wire.WireProtocolError as exc:
+            # the length field was honest (we read a complete frame), so
+            # stream alignment holds: answer an error, keep the conn
+            self.send_frame(
+                frame.opcode, rid, meta=_error_payload(op, exc),
+                flags=wire.FLAG_RESPONSE | wire.FLAG_ERROR,
+            )
+            return
+        try:
+            if frame.opcode == wire.OP_SCORE:
+                self._frame_score(meta, data, rid)
+            elif frame.opcode == wire.OP_STEP:
+                self._frame_step(meta, data, rid)
+            else:
+                req = dict(meta)
+                req["op"] = op
+                getattr(self, f"_op_{op}")(req, rid)
+        except Exception as exc:  # same per-request isolation as dispatch()
+            self.send(_error_payload(op, exc), rid)
+        if tel.detail:
+            tel.observe_stage("wire_ms", (tel.now() - t_in) * 1e3)
+
+    def _frame_score(self, meta: dict, data, rid: int) -> None:
+        """A SCORE frame: ``n`` windows of shape ``(t, f)`` as one raw
+        float32 block.  ``np.frombuffer`` makes ``windows`` a view of
+        the recv payload; the only copy happens when the batcher packs
+        its bucket pad buffer."""
+        if "series" in meta and not len(data):
+            # JSON-style request tunneled through a generic meta frame
+            # (client.request("score", series=...)) — slow path, but it
+            # keeps every JSON request (trace included) expressible over
+            # bp1; the response frames through the protocol-aware send()
+            req = dict(meta)
+            req["op"] = "score"
+            self._op_score(req, rid)
+            return
+        n = meta.get("n", 1)
+        t = meta.get("t")
+        f = meta.get("f", self.gateway.pool.features)
+        if (not isinstance(n, int) or not isinstance(t, int)
+                or not isinstance(f, int) or n < 0 or t < 1 or f < 1):
+            raise ValueError(
+                f"score frame needs integer meta n>=0, t>=1, f>=1; "
+                f"got n={n!r} t={t!r} f={f!r}"
+            )
+        if n == 0:
+            # an empty pipelined batch is legal and answers immediately
+            self.send_frame(
+                wire.OP_SCORE, rid, meta={"ok": True, "op": "score", "n": 0}
+            )
+            return
+        windows = wire.decode_f32(data, (n, t, f))
+        tid = meta.get("trace")
+        span = (self.gateway.tracer.start("score", trace_id=str(tid))
+                if tid is not None and n == 1 else None)
+        if span is not None:
+            span.mark("dispatch")
+        collector = _FrameScores(self, rid, n, span)
+        priority = meta.get("priority")
+        tenant = meta.get("tenant")
+        try:
+            for i in range(n):
+                ticket = self.gateway.submit(
+                    windows[i], priority=priority, tenant=tenant
+                )
+                ticket.add_done_callback(collector.bind(i))
+        except Exception:
+            collector.cancel()  # one error answers the whole frame
+            raise
+
+    def _frame_step(self, meta: dict, data, rid: int) -> None:
+        """A STEP frame: ``t`` consecutive samples for this connection's
+        session in one frame (amortizes the round-trip; the response
+        returns every intermediate running error).  Durable sessions get
+        their ``seq``/``token`` from the LAST sample, which is exactly
+        what a replaying client needs."""
+        feats = self.gateway.pool.features
+        if "x" in meta and not len(data):
+            # JSON-style request tunneled through a generic meta frame
+            req = dict(meta)
+            req["op"] = "step"
+            self._op_step(req, rid)
+            return
+        k = meta.get("t", 1)
+        if not isinstance(k, int) or k < 1:
+            raise ValueError(f"step frame needs integer meta t>=1, got {k!r}")
+        count = len(data) // 4
+        if k == 1 and count != feats:
+            # same message the JSON protocol's shape check produces
+            raise ValueError(
+                f"expected sample shape ({feats},), got ({count},)"
+            )
+        xs = wire.decode_f32(data, (k, feats))
+        if self.stream_id is None:
+            dur = self.gateway.durability
+            if dur is not None:
+                self.stream_id, _ = dur.admit()
+            else:
+                self.session_seq += 1
+                sid = ("conn", self.conn_id, self.session_seq)
+                self.gateway.admit(sid)
+                self.stream_id = sid
+        errors = np.zeros(k, np.float32)
+        seq = token = None
+        dur = self._durable
+        for i in range(k):
+            if dur is not None:
+                running, seq, token = dur.step(self.stream_id, xs[i])
+            else:
+                running = self.gateway.step({self.stream_id: xs[i]})[self.stream_id]
+            errors[i] = running
+        meta_out = {"ok": True, "op": "step", "t": k,
+                    "running_error": float(errors[-1])}
+        if token is not None:
+            meta_out["seq"] = seq
+            meta_out["token"] = token
+        threshold = self.gateway.threshold
+        if threshold is not None:
+            meta_out["alert"] = [bool(e > threshold) for e in errors.tolist()]
+        self.send_frame(wire.OP_STEP, rid, meta=meta_out, data=errors.tobytes())
 
     def _alert_field(self, payload: dict, value: float) -> dict:
         threshold = self.gateway.threshold

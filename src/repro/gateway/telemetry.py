@@ -106,7 +106,10 @@ class Telemetry:
     """Counters + gauges + fixed-boundary latency histograms.
 
     counters    monotonically increasing event counts (requests, batches,
-                stream-steps, rejections)
+                stream-steps, rejections; per-protocol transport traffic
+                as ``wire.req_json`` / ``wire.req_bp1`` and per-connection
+                ``wire.conn_json`` / ``wire.conn_bp1`` — how much of a
+                front's load negotiated the binary protocol)
     gauges      last-set scalar values (queue depth, pool occupancy)
     gauge_vecs  last-set per-shard vectors (device occupancy / flush fill)
     histograms  request latency + per-stage decompositions -> p50/p95/p99

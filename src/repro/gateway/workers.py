@@ -12,9 +12,12 @@ hardware does — by replication:
   ``SO_REUSEPORT`` (bound, never listening, so the ephemeral port
   survives worker churn) and forks N worker processes that each bind the
   same address and ``listen()``; the kernel load-balances incoming
-  connections across the listening sockets.  The wire protocol is
-  byte-for-byte the PR-3 protocol — clients cannot tell one worker from
-  eight.
+  connections across the listening sockets.  Every worker runs the same
+  :class:`GatewayServer` code, so the wire behaviour is byte-identical
+  across workers — bp1 binary frames for clients that negotiate them,
+  the PR-3 JSON-lines protocol as per-connection fallback — and clients
+  cannot tell one worker from eight (negotiation happens per connection,
+  after the kernel has already picked the worker).
 * **One engine per worker** — each worker builds its own
   ``AnomalyGateway`` (own ``Engine``, own compiled programs, own
   ``Placement`` shard when the factory asks for one) in its own process,

@@ -7,9 +7,10 @@ Modes, per model family:
 - LSTM-AE with ``--gateway``: the streaming gateway — a ``--capacity``-slot
   session pool with admit/evict churn plus a micro-batched one-shot scoring
   queue (``--max-batch`` / ``--max-wait-ms``); prints gateway telemetry.
-- LSTM-AE with ``--http``: the same gateway behind the asyncio JSON-lines
-  socket transport (``--host`` / ``--port``; background pump, graceful
-  drain on SIGINT/SIGTERM) — drive it with ``examples/gateway_client.py``.
+- LSTM-AE with ``--http``: the same gateway behind the asyncio socket
+  transport (``--host`` / ``--port``; bp1 binary frames with per-connection
+  JSON-lines fallback, background pump, graceful drain on SIGINT/SIGTERM)
+  — drive it with ``examples/gateway_client.py``.
 - LSTM-AE with ``--http --workers N``: the multi-worker front
   (``repro.gateway.workers``) — N worker processes share one
   ``SO_REUSEPORT`` port, each with its own engine (and its own
@@ -182,9 +183,11 @@ def serve_gateway(cfg, args) -> None:
 
 
 def serve_http(cfg, args) -> None:
-    """Run the asyncio JSON-lines transport (``repro.gateway.server``) in
-    front of the gateway until SIGINT/SIGTERM, then drain gracefully.
-    Clients: ``examples/gateway_client.py`` or
+    """Run the socket transport (``repro.gateway.server``) in front of
+    the gateway until SIGINT/SIGTERM, then drain gracefully.  Serves the
+    bp1 binary frame protocol to clients that negotiate it and falls
+    back to JSON lines per connection.  Clients:
+    ``examples/gateway_client.py`` or
     ``repro.gateway.client.GatewayClient``."""
     from repro.gateway.server import GatewayServer
 
@@ -229,6 +232,7 @@ def serve_http(cfg, args) -> None:
                        f"priority_classes={args.priority_classes}")
         scrape = f" metrics_port={metrics.port}" if metrics else ""
         print(f"[http] listening on {srv.host}:{srv.port}{scrape} "
+              f"protocols=bp1+json "
               f"(schedule={gw.engine.schedule.tag}, capacity={gw.pool.capacity}, "
               f"max_batch={gw.batcher.max_batch}, "
               f"max_wait_ms={gw.batcher.max_wait_ms}{mesh}{durable}"
@@ -308,7 +312,7 @@ def serve_workers(cfg, args) -> None:
             control = (f" slo_p95_ms={args.slo_p95_ms}{bounds} "
                        f"priority_classes={args.priority_classes}")
         print(f"[workers] listening on {f.host}:{f.port}{scrape} "
-              f"workers={n_workers} mesh={mesh_ways}xdata "
+              f"protocols=bp1+json workers={n_workers} mesh={mesh_ways}xdata "
               f"(schedule={args.schedule}, capacity={args.capacity} and "
               f"max_batch={args.max_batch} per worker){control}", flush=True)
 
@@ -378,9 +382,9 @@ def main() -> None:
                     help="serve through the streaming gateway (LSTM-AE): "
                          "session pool + micro-batched one-shot queue")
     ap.add_argument("--http", action="store_true",
-                    help="serve the gateway over the asyncio JSON-lines "
-                         "transport until SIGTERM (LSTM-AE); see README "
-                         "§Transport")
+                    help="serve the gateway over the socket transport "
+                         "(bp1 binary frames, JSON-lines fallback) until "
+                         "SIGTERM (LSTM-AE); see README §Transport")
     ap.add_argument("--workers", type=int, default=0,
                     help="fork N gateway worker processes sharing one "
                          "SO_REUSEPORT port (implies --http); each worker "
